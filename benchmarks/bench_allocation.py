@@ -1,0 +1,76 @@
+"""Paper Figs. 3-5: closed-form OP allocation (eq. 8) vs hill-climbed
+optimum across the workload-configuration space."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    allocate_by_frequency,
+    allocate_by_size,
+    allocate_closed_form,
+    optimal_allocation,
+    total_wa,
+)
+
+from benchmarks.common import report, table
+
+
+def _wa(s, p, op):
+    return float(total_wa(jnp.asarray(s), jnp.asarray(p), jnp.asarray(op)))
+
+
+def sweep(n_groups: int, q: int, lba_pba: float, n_configs: int, rng):
+    lba = 100_000.0
+    op_total = lba * (1.0 / lba_pba - 1.0)
+    errs, errs_size, errs_freq = [], [], []
+    for _ in range(n_configs):
+        s = rng.multinomial(q - n_groups, np.ones(n_groups) / n_groups) + 1
+        p = rng.multinomial(q - n_groups, np.ones(n_groups) / n_groups) + 1
+        s = s / q * lba
+        p = p / q
+        opt = optimal_allocation(jnp.asarray(s), jnp.asarray(p), jnp.asarray(op_total))
+        wa_opt = _wa(s, p, opt)
+        for policy, bucket in (
+            (allocate_closed_form(jnp.asarray(s), jnp.asarray(p), op_total, cold_rule=False), errs),
+            (allocate_by_size(jnp.asarray(s), op_total), errs_size),
+            (allocate_by_frequency(jnp.asarray(p), op_total), errs_freq),
+        ):
+            bucket.append((_wa(s, p, policy) - wa_opt) / wa_opt * 100)
+    return errs, errs_size, errs_freq
+
+
+def run(full: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    n_configs = 10 if not full else 60
+    rows = []
+    for q in (10, 20):
+        for n_groups in (2, 3, 5, 7, 9) if full else (2, 3, 5):
+            errs, e_size, e_freq = sweep(n_groups, q, 0.7, n_configs, rng)
+            rows.append({
+                "Q": q, "groups": n_groups,
+                "closed_avg_%off": round(float(np.mean(errs)), 3),
+                "closed_max_%off": round(float(np.max(errs)), 3),
+                "size_only_avg": round(float(np.mean(e_size)), 2),
+                "freq_only_avg": round(float(np.mean(e_freq)), 2),
+            })
+            print(rows[-1])
+    # Fig. 5: across over-provisioning levels (groups fixed at 5)
+    for r in (0.6, 0.7, 0.8, 0.9):
+        errs, _, _ = sweep(5, 10, r, n_configs, rng)
+        rows.append({
+            "Q": 10, "groups": 5, "lba_pba": r,
+            "closed_avg_%off": round(float(np.mean(errs)), 3),
+            "closed_max_%off": round(float(np.max(errs)), 3),
+        })
+        print(rows[-1])
+    out = {"figure": "3-5", "rows": rows}
+    report("allocation", out)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

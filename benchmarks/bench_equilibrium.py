@@ -1,0 +1,53 @@
+"""Paper Fig. 1: equilibrium δ / WA vs LBA/PBA — analytical model vs
+simulation (LRU matches eq. 3; greedy is the known slight improvement)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.analytics import delta_from_op_ratio, wa_from_op_ratio
+from repro.core.ssd import Geometry
+
+from benchmarks.common import report, table
+
+
+def run(full: bool = False) -> dict:
+    ratios = (0.6, 0.7, 0.8, 0.9) if not full else tuple(np.arange(0.55, 0.95, 0.05))
+    writes = 150_000 if not full else 600_000
+    geom0 = Geometry()
+    rows = []
+    for r in ratios:
+        geom = dataclasses.replace(geom0, lba_pba=float(r))
+        s = geom.lba_pages
+        op_eff = geom.pba_pages - 3 * geom.pages_per_block - s
+        r_eff = s / (s + op_eff)
+        wa_model = float(wa_from_op_ratio(jnp.asarray(r_eff)))
+        delta_model = float(delta_from_op_ratio(jnp.asarray(r_eff)))
+        row = {
+            "lba_pba": round(float(r), 3),
+            "delta_eq3": round(delta_model, 4),
+            "wa_eq3": round(wa_model, 3),
+        }
+        for policy in ("lru", "greedy"):
+            mcfg = dataclasses.replace(M.single_group(), gc_policy=policy)
+            res = M.simulate(geom, mcfg, [W.uniform(s, writes)], seed=1)
+            wa = float(res.wa_curve(10_000)[-5:].mean())
+            row[f"wa_{policy}"] = round(wa, 3)
+            row[f"{policy}_vs_model"] = round(wa / wa_model, 3)
+        rows.append(row)
+        print(row)
+    out = {"figure": "1", "rows": rows}
+    report("equilibrium", out)
+    print(table(rows, list(rows[0].keys())))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

@@ -1,0 +1,51 @@
+"""Paper Figs. 6-7: WA over time across a frequency swap — Wolf vs FDP.
+Headline: extra migrations vs no-swap, normalized by PBA (paper: 0.7% vs
+152.1%)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.ssd import Geometry
+
+from benchmarks.common import report, table
+
+
+def run(full: bool = False) -> dict:
+    geom = Geometry() if not full else Geometry(
+        n_luns=8, blocks_per_lun=256, pages_per_block=32
+    )
+    writes = 150_000 if not full else 1_000_000
+    ph1, ph2 = W.swap_phases(geom.lba_pages, writes, p=(0.1, 0.9))
+    rows, curves = [], {}
+    for name, mcfg in (("wolf", M.wolf()), ("fdp", M.fdp())):
+        swap = M.simulate(geom, mcfg, [ph1, ph2], seed=3)
+        noswap = M.simulate(geom, mcfg, [ph1, ph1], seed=3)
+        extra = float(swap.mig[-1] - noswap.mig[-1]) / geom.pba_pages
+        curve = swap.wa_curve(window=writes // 30)
+        curves[name] = [round(float(x), 3) for x in curve]
+        half = len(curve) // 2
+        rows.append({
+            "manager": name,
+            "extra_migrations/PBA": round(extra, 4),
+            "wa_before_swap": round(float(curve[half - 3:half].mean()), 3),
+            "wa_peak_after": round(float(curve[half:half + 6].max()), 3),
+            "wa_final": round(float(curve[-3:].mean()), 3),
+            "wa_total": round(swap.wa_total, 3),
+        })
+        print(rows[-1])
+    ratio = rows[1]["extra_migrations/PBA"] / max(rows[0]["extra_migrations/PBA"], 1e-4)
+    out = {"figure": "6-7", "rows": rows, "curves": curves,
+           "fdp_vs_wolf_extra_ratio": round(ratio, 1)}
+    report("freq_swap", out)
+    print(table(rows, list(rows[0].keys())))
+    print(f"FDP pays {ratio:.0f}x more extra migrations than Wolf (paper: ~217x)")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

@@ -1,0 +1,49 @@
+"""Paper Fig. 8: pairwise frequency swaps among 5 exponential groups —
+migration difference (FDP − Wolf) normalized by PBA, per pair."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.ssd import Geometry
+
+from benchmarks.common import report, table
+
+
+def run(full: bool = False) -> dict:
+    geom = Geometry()
+    writes = 80_000 if not full else 400_000
+    base = W.exponential_groups(geom.lba_pages, writes)
+    pairs = (
+        [(0, 4), (0, 2), (1, 4), (2, 4), (3, 4)]
+        if not full
+        else [(i, j) for i in range(5) for j in range(i + 1, 5)]
+    )
+    rows = []
+    for (i, j) in pairs:
+        swapped = W.pairwise_swap(base, i, j, writes)
+        extra = {}
+        for name, mcfg in (("wolf", M.wolf()), ("fdp", M.fdp())):
+            s = M.simulate(geom, mcfg, [base, swapped], seed=6)
+            b = M.simulate(geom, mcfg, [base, base], seed=6)
+            extra[name] = float(s.mig[-1] - b.mig[-1]) / geom.pba_pages
+        rows.append({
+            "pair": f"{i}<->{j}",
+            "freq_gap": round(abs(base.probs[j] - base.probs[i]), 3),
+            "wolf_extra/PBA": round(extra["wolf"], 3),
+            "fdp_extra/PBA": round(extra["fdp"], 3),
+            "fdp_minus_wolf": round(extra["fdp"] - extra["wolf"], 3),
+        })
+        print(rows[-1])
+    out = {"figure": "8", "rows": rows}
+    report("swap_matrix", out)
+    print(table(rows, list(rows[0].keys())))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

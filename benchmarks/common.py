@@ -1,0 +1,36 @@
+"""Shared benchmark helpers: reporting + reduced/full scale presets."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+REPORT_DIR = pathlib.Path("reports/benchmarks")
+
+
+def report(name: str, payload: dict):
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    path = REPORT_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=float))
+    return path
+
+
+def table(rows: list[dict], columns: list[str]) -> str:
+    widths = {
+        c: max(len(c), *(len(f"{r.get(c, '')}") for r in rows)) for c in columns
+    }
+    lines = ["  ".join(c.ljust(widths[c]) for c in columns)]
+    lines.append("  ".join("-" * widths[c] for c in columns))
+    for r in rows:
+        lines.append("  ".join(f"{r.get(c, '')}".ljust(widths[c]) for c in columns))
+    return "\n".join(lines)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,43 @@
+"""Benchmark driver: one benchmark per paper figure + the TPU adaptation.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHMARKS = (
+    ("equilibrium", "Fig 1  — eq.3 vs simulation"),
+    ("allocation", "Fig 3-5 — closed-form vs optimal OP allocation"),
+    ("greedy_lru", "Fig 2  — greedy vs LRU after movement ops"),
+    ("freq_swap", "Fig 6-7 — Wolf vs FDP across a frequency swap"),
+    ("swap_matrix", "Fig 8  — pairwise swap matrix"),
+    ("tpcc", "Fig 9-10 — TPC-C-like realistic workload"),
+    ("wolf_kv", "TPU adaptation — Wolf-KV serving WA"),
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    results = {}
+    for name, desc in BENCHMARKS:
+        if args.only and args.only != name:
+            continue
+        print(f"\n=== {name}: {desc} ===")
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        results[name] = mod.run(full=args.full)
+        print(f"[{name}] {time.time() - t0:.1f}s")
+    print("\nAll benchmark reports under reports/benchmarks/.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""Serve a small model with batched requests over the Wolf-KV paged cache —
+the paper's block manager as a first-class serving feature.
+
+    PYTHONPATH=src python examples/serve_wolf_kv.py --requests 9
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.exit(serve_main(sys.argv[1:]))

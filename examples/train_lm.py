@@ -1,0 +1,22 @@
+"""Train a small LM for a few hundred steps with the full production stack:
+AdamW + microbatching + checkpointing + the fault-tolerant runner.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    args = ap.parse_args()
+    sys.exit(train_main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64", "--microbatches", "2",
+        "--checkpoint-every", "100",
+    ]))

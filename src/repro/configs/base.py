@@ -1,0 +1,152 @@
+"""Config system: model/architecture configs and input-shape sets.
+
+Every assigned architecture gets a ``src/repro/configs/<id>.py`` exporting
+``CONFIG: ModelConfig``. Shapes are global (the assignment pairs every LM arch
+with the same 4-shape set); per-arch applicability (e.g. long_500k only for
+sub-quadratic archs) is encoded in ``ModelConfig.supports_shape``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+ShapeKind = Literal["train", "prefill", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: what gets lowered for the dry-run."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: ShapeKind
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+# The assignment's 4-shape set for the LM family (10 archs × 4 = 40 cells).
+TRAIN_4K = ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig("long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+SHAPES: dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. Every field the 10 assigned archs need."""
+
+    arch_id: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 → d_model // n_heads
+
+    # --- attention flavour ---
+    mlp_type: Literal["swiglu", "gelu", "none"] = "swiglu"
+    sliding_window: int = 0           # 0 → full attention
+    global_attn_layers: tuple[int, ...] = ()  # hybrid: layers w/ full attn
+    rope_theta: float = 10_000.0
+    use_rope: bool = True             # False → learned absolute positions
+    max_position: int = 1_048_576     # learned-pos table size cap
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0                # 0 → dense
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0
+
+    # --- SSM / recurrent ---
+    ssm_state: int = 0                # mamba state size (hymba)
+    slstm_every: int = 0              # xlstm: every k-th layer is sLSTM
+    conv_kernel: int = 4
+
+    # --- hybrid (hymba) ---
+    parallel_ssm_heads: bool = False  # attn ∥ mamba heads in one layer
+
+    # --- encoder-decoder (whisper) ---
+    n_encoder_layers: int = 0         # 0 → decoder-only
+    encoder_seq_ratio: int = 1        # enc frames = seq_len // ratio
+
+    # --- modality frontend stubs ---
+    frontend: Literal["none", "vision_patches", "audio_frames"] = "none"
+    frontend_tokens_ratio: float = 0.0  # fraction of seq that is stub embeds
+
+    # --- numerics ---
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA grouping"
+
+    # ------------------------------------------------------------------
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if serving memory/compute does not grow quadratically with
+        context (recurrent state, or sliding-window attention everywhere)."""
+        if self.family == "ssm":
+            return True
+        if self.sliding_window > 0:
+            return True
+        return False
+
+    @property
+    def has_kv_cache(self) -> bool:
+        return self.family != "ssm"
+
+    def supports_shape(self, shape: ShapeConfig) -> bool:
+        if shape.name == "long_500k":
+            return self.is_subquadratic
+        return True
+
+    # ------------------------------------------------------------------
+    # Parameter count (for MODEL_FLOPS = 6·N·D roofline term)
+    def param_count(self, *, active_only: bool = False) -> int:
+        d, l = self.d_model, self.n_layers
+        dh = self.d_head
+        attn = d * (self.n_heads * dh) + 2 * d * (self.n_kv_heads * dh) + (self.n_heads * dh) * d
+
+        def mlp_params(d_ff: int) -> int:
+            if self.mlp_type == "swiglu":
+                return 3 * d * d_ff
+            if self.mlp_type == "gelu":
+                return 2 * d * d_ff
+            return 0
+
+        if self.n_experts:
+            experts = self.n_experts
+            if active_only:
+                experts = self.top_k + self.n_shared_experts
+            block_mlp = experts * mlp_params(self.d_ff) + d * self.n_experts
+        else:
+            block_mlp = mlp_params(self.d_ff)
+
+        if self.family == "ssm":  # xLSTM estimate: pf=2 mLSTM projections
+            block = 2 * d * (2 * d) + 3 * (2 * d) * dh * self.n_heads // max(self.n_heads, 1)
+            block = 6 * d * d  # up/down (4d²) + qkv/gates (~2d²)
+            per_layer = block
+        elif self.parallel_ssm_heads:
+            per_layer = attn + block_mlp + 2 * d * d  # + mamba in/out proj
+        else:
+            per_layer = attn + block_mlp
+
+        total = l * per_layer
+        if self.n_encoder_layers:
+            total += self.n_encoder_layers * (attn + attn + block_mlp)  # self+cross
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return total + emb

@@ -1,0 +1,15 @@
+"""granite-20b [dense]: 52L d_model=6144 48H (GQA kv=1/MQA) d_ff=24576
+vocab=49152 — llama-arch, code [arXiv:2405.04324; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    mlp_type="gelu",  # d_ff = 4·d_model, GPT-BigCode-style 2-matrix MLP
+)

@@ -1,0 +1,25 @@
+"""Core: the paper's contribution — WA analytics, OP allocation, SSD simulator,
+and the Wolf / FDP / single-group block managers."""
+
+from .analytics import (
+    block_decay_updates,
+    block_live_pages,
+    delta_from_op_ratio,
+    delta_from_op_ratio_lambertw,
+    delta_from_wa,
+    lambertw0,
+    op_ratio_from_delta,
+    op_ratio_from_wa,
+    wa_from_delta,
+    wa_from_op_ratio,
+)
+from .allocation import (
+    allocate_by_frequency,
+    allocate_by_size,
+    allocate_closed_form,
+    group_delta,
+    group_wa,
+    hillclimb_allocation,
+    optimal_allocation,
+    total_wa,
+)

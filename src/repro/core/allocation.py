@@ -1,0 +1,263 @@
+"""Over-provisioning allocation across temperature groups (paper §5.5).
+
+The SSD (or any log-structured block pool) is partitioned into n groups with
+logical sizes s_1..s_n (pages) and update frequencies p_1..p_n (probability an
+incoming application write targets the group; Σp = 1). The task: split the
+total over-provisioned space OP = PBA - LBA among groups to minimize
+
+    WA = Σ_x p_x · WA(s_x, OP_x)                                   (eq. 5)
+
+where each group behaves as a closed uniform-workload sub-SSD, so its δ_x
+solves  s_x/(s_x+OP_x) = (δ_x-1)/ln(δ_x)  (eq. 4 ≡ eq. 3 per group).
+
+Policies implemented:
+  * ``allocate_by_size``       eq. (6):  OP_x = s_x · V,  V = OP/LBA
+                               (what greedy-across-groups GC converges to)
+  * ``allocate_by_frequency``  eq. (7):  OP_x = p_x · OP
+  * ``allocate_closed_form``   eq. (8):  the average of the two — the paper's
+                               near-optimal closed form, plus the §5.5.3
+                               cold-group escape hatch.
+  * ``optimal_allocation``     convex optimization on the simplex (the paper's
+                               hill-climbing oracle baseline [20, 9]).
+  * ``hillclimb_allocation``   the literal block-granularity hill climber.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .analytics import op_ratio_from_delta, wa_from_delta
+
+__all__ = [
+    "group_delta",
+    "group_wa",
+    "total_wa",
+    "allocate_by_size",
+    "allocate_by_frequency",
+    "allocate_closed_form",
+    "optimal_allocation",
+    "hillclimb_allocation",
+]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable per-group WA.
+#
+# δ(r) inverts eq. 3 by bisection, which is not usefully differentiable, so we
+# attach the implicit-function derivative:  with f(δ) = (δ-1)/ln(δ),
+#   f'(δ) = (ln(δ) - (δ-1)/δ) / ln(δ)²   and  dδ/dr = 1 / f'(δ).
+# ---------------------------------------------------------------------------
+
+@jax.custom_jvp
+def _delta_from_ratio(r: jax.Array) -> jax.Array:
+    r = jnp.asarray(r)
+    lo = jnp.full(jnp.shape(r), 1e-9, r.dtype)
+    hi = jnp.full(jnp.shape(r), 1.0 - 1e-9, r.dtype)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_low = op_ratio_from_delta(mid) < r
+        return jnp.where(too_low, mid, lo), jnp.where(too_low, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, 80, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+@_delta_from_ratio.defjvp
+def _delta_from_ratio_jvp(primals, tangents):
+    (r,) = primals
+    (rdot,) = tangents
+    delta = _delta_from_ratio(r)
+    ln = jnp.log(delta)
+    fprime = (ln - (delta - 1.0) / delta) / (ln * ln)
+    return delta, rdot / fprime
+
+
+def group_delta(s: jax.Array, op: jax.Array) -> jax.Array:
+    """δ_x for a group of logical size ``s`` with over-provisioning ``op``."""
+    s = jnp.asarray(s, jnp.float32)
+    op = jnp.asarray(op, jnp.float32)
+    r = s / jnp.maximum(s + op, 1e-30)
+    return _delta_from_ratio(jnp.clip(r, 1e-6, 1.0 - 1e-7))
+
+
+def group_wa(s: jax.Array, op: jax.Array) -> jax.Array:
+    """WA(s_x, OP_x) = 1/(1-δ_x)."""
+    return wa_from_delta(group_delta(s, op))
+
+
+def total_wa(s: jax.Array, p: jax.Array, op: jax.Array) -> jax.Array:
+    """Eq. (5): frequency-weighted overall write-amplification."""
+    return jnp.sum(jnp.asarray(p) * group_wa(s, op))
+
+
+# ---------------------------------------------------------------------------
+# The three closed-form policies (paper §5.5.1–5.5.3)
+# ---------------------------------------------------------------------------
+
+def allocate_by_size(s: jax.Array, op_total: jax.Array) -> jax.Array:
+    """Eq. (6): OP_x = s_x · V with V = OP/LBA. Equalizes δ across groups."""
+    s = jnp.asarray(s, jnp.float32)
+    return s * (op_total / jnp.sum(s))
+
+
+def allocate_by_frequency(p: jax.Array, op_total: jax.Array) -> jax.Array:
+    """Eq. (7): OP_x = p_x · OP."""
+    p = jnp.asarray(p, jnp.float32)
+    return p / jnp.sum(p) * op_total
+
+
+def allocate_closed_form(
+    s: jax.Array,
+    p: jax.Array,
+    op_total: jax.Array,
+    *,
+    cold_rule: bool = True,
+    cold_hit_rate_frac: float = 0.05,
+    cold_op_frac: float = 0.05,
+) -> jax.Array:
+    """Eq. (8): OP_x = (s_x·V + p_x·OP)/2, the paper's near-optimal closed form.
+
+    §5.5.3 cold-group handling: when the coldest group's hit rate (p/s) is
+    below ``cold_hit_rate_frac`` of the second-coldest group's, it receives a
+    fixed allocation of ``cold_op_frac`` × (smallest group's logical size) and
+    the closed form is applied to the remaining groups/OP.
+
+    Preserves Σ OP_x = OP and OP_x ≥ 0 by construction. Fully vectorized and
+    jittable (the cold rule is a lax.cond-free masked computation).
+    """
+    s = jnp.asarray(s, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    op_total = jnp.asarray(op_total, jnp.float32)
+    n = s.shape[0]
+
+    def closed_form(s, p, op):
+        v = op / jnp.sum(s)
+        pn = p / jnp.maximum(jnp.sum(p), 1e-30)
+        return 0.5 * (s * v + pn * op)
+
+    base = closed_form(s, p, op_total)
+    if not cold_rule or n < 2:
+        return base
+
+    hit = p / jnp.maximum(s, 1e-30)
+    order = jnp.argsort(hit)
+    coldest = order[0]
+    second = order[1]
+    is_skewed = hit[coldest] < cold_hit_rate_frac * hit[second]
+    # Guard (beyond-paper): eq. 5 weights each group's WA by its update
+    # frequency, so a group carrying a non-trivial share of writes must not
+    # be starved even if its per-page rate is low (a big, lukewarm group can
+    # sit just under the 5% hit-rate threshold while taking ~7% of traffic —
+    # found by the hypothesis suite). The paper's TPC-C cold cluster has
+    # p ≈ 0; restrict the fixed-allocation escape hatch to that regime.
+    is_skewed &= p[coldest] / jnp.maximum(jnp.sum(p), 1e-30) < 0.02
+
+    cold_op = cold_op_frac * jnp.min(s)
+    cold_op = jnp.minimum(cold_op, op_total)  # never exceed the budget
+    mask = jnp.arange(n) != coldest
+    rest = closed_form(
+        jnp.where(mask, s, 0.0), jnp.where(mask, p, 0.0), op_total - cold_op
+    )
+    with_cold = jnp.where(mask, rest, cold_op)
+    return jnp.where(is_skewed, with_cold, base)
+
+
+# ---------------------------------------------------------------------------
+# Oracle optima (the paper's comparison baselines)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def optimal_allocation(
+    s: jax.Array,
+    p: jax.Array,
+    op_total: jax.Array,
+    *,
+    steps: int = 600,
+    lr: float = 0.25,
+) -> jax.Array:
+    """Minimize eq. (5) over the simplex {OP_x ≥ 0, Σ OP_x = OP}.
+
+    The optimization space is convex (paper §5.5.3), so mirror descent
+    (exponentiated gradient) on simplex weights converges to the optimum.
+    Initialized at the closed form, which is already near-optimal.
+    """
+    s = jnp.asarray(s, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    op_total = jnp.asarray(op_total, jnp.float32)
+
+    init = allocate_closed_form(s, p, op_total, cold_rule=False)
+    theta0 = jnp.log(jnp.maximum(init / op_total, 1e-6))
+
+    def objective(theta):
+        u = jax.nn.softmax(theta)
+        return total_wa(s, p, u * op_total)
+
+    grad_fn = jax.value_and_grad(objective)
+
+    def body(i, carry):
+        theta, best_theta, best_wa = carry
+        wa, g = grad_fn(theta)
+        better = wa < best_wa
+        best_theta = jnp.where(better, theta, best_theta)
+        best_wa = jnp.where(better, wa, best_wa)
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
+        gnorm = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30)
+        step = lr / (1.0 + 0.02 * i)  # decaying step for last-mile precision
+        return theta - step * g / gnorm, best_theta, best_wa
+
+    init_carry = (theta0, theta0, objective(theta0))
+    _, best_theta, _ = jax.lax.fori_loop(0, steps, body, init_carry)
+    return jax.nn.softmax(best_theta) * op_total
+
+
+def hillclimb_allocation(
+    s: jax.Array,
+    p: jax.Array,
+    op_total: float,
+    *,
+    block_pages: int = 128,
+    max_moves: int = 10_000,
+) -> jax.Array:
+    """The literal hill climber from [20]: start from a proportional split and
+    repeatedly move one block of OP from the group whose WA suffers least to
+    the group whose WA gains most, until no move improves. Convexity makes
+    this globally optimal (to block granularity). Jittable via while_loop.
+    """
+    s = jnp.asarray(s, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    n = s.shape[0]
+    step = jnp.asarray(float(block_pages), jnp.float32)
+    op = allocate_by_size(s, op_total)
+
+    def wa_of(op):
+        return total_wa(s, p, op)
+
+    def cond(carry):
+        op, improved, it = carry
+        return jnp.logical_and(improved, it < max_moves)
+
+    def body(carry):
+        op, _, it = carry
+        base = wa_of(op)
+        eye = jnp.eye(n, dtype=op.dtype) * step
+        # WA after donating one block FROM group i (only if it has ≥ one block)
+        can_give = op >= step
+        wa_minus = jax.vmap(lambda d: wa_of(op - d))(eye)
+        wa_minus = jnp.where(can_give, wa_minus, jnp.inf)
+        giver = jnp.argmin(wa_minus)
+        # WA after then granting that block TO group j
+        op_after_take = op - eye[giver]
+        wa_plus = jax.vmap(lambda d: wa_of(op_after_take + d))(eye)
+        wa_plus = wa_plus.at[giver].set(jnp.inf)
+        taker = jnp.argmin(wa_plus)
+        new_op = op_after_take + eye[taker]
+        improved = wa_plus[taker] < base - 1e-9
+        return (jnp.where(improved, new_op, op), improved, it + 1)
+
+    op, _, _ = jax.lax.while_loop(cond, body, (op, jnp.asarray(True), 0))
+    return op

@@ -1,0 +1,165 @@
+"""Analytical write-amplification model (paper §4 + Appendix A).
+
+All functions are pure jnp and jit/vmap/grad-compatible. They operate on
+float arrays of any shape (broadcasting elementwise).
+
+Notation (paper Table 1):
+    B    pages per erase block
+    LBA  logical address space, in pages
+    PBA  physical address space, in pages
+    OP   over-provisioned pages, OP = PBA - LBA
+    r    the over-provisioning ratio LBA/PBA in (0, 1)
+    delta (δ)  mean fraction of a victim block's pages migrated per GC
+    WA   write-amplification = physical writes / application writes
+
+Key results reproduced here:
+    eq. (1)  X = LBA * ln(B / G)        (updates until G live pages remain)
+    eq. (2)  G = B * exp(-X / LBA)      (block decay)
+    eq. (3)  r = (δ - 1) / ln(δ)        (equilibrium)
+    WA       = 1 / (1 - δ)
+    eq. (9)  δ = -r * W0(-(1/r) e^(-1/r))   (Appendix A, Lambert-W inverse)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "block_decay_updates",
+    "block_live_pages",
+    "op_ratio_from_delta",
+    "delta_from_op_ratio",
+    "delta_from_op_ratio_lambertw",
+    "wa_from_delta",
+    "delta_from_wa",
+    "wa_from_op_ratio",
+    "op_ratio_from_wa",
+    "lambertw0",
+]
+
+
+# ---------------------------------------------------------------------------
+# Block lifetime (paper §4.1)
+# ---------------------------------------------------------------------------
+
+def block_decay_updates(g: jax.Array, *, b: float, lba: float) -> jax.Array:
+    """Eq. (1): expected application updates X until a freshly written block of
+    ``b`` pages has decayed to ``g`` live pages, under a uniform workload over
+    ``lba`` logical pages."""
+    g = jnp.asarray(g)
+    return lba * jnp.log(b / g)
+
+
+def block_live_pages(x: jax.Array, *, b: float, lba: float) -> jax.Array:
+    """Eq. (2): expected live pages G remaining after ``x`` application updates."""
+    x = jnp.asarray(x)
+    return b * jnp.exp(-x / lba)
+
+
+# ---------------------------------------------------------------------------
+# Equilibrium (paper §4.2)
+# ---------------------------------------------------------------------------
+
+def op_ratio_from_delta(delta: jax.Array) -> jax.Array:
+    """Eq. (3): LBA/PBA as a function of δ.
+
+    (δ-1)/ln(δ) is smooth on (0,1) with a removable singularity at δ=1 where
+    the value tends to 1 (full utilization). We guard δ→1 and δ→0.
+    """
+    delta = jnp.asarray(delta)
+    eps = jnp.asarray(1e-12, delta.dtype)
+    d = jnp.clip(delta, eps, 1.0 - 1e-7)
+    return (d - 1.0) / jnp.log(d)
+
+
+def wa_from_delta(delta: jax.Array) -> jax.Array:
+    """WA = 1/(1-δ) (paper §4.2)."""
+    delta = jnp.asarray(delta)
+    return 1.0 / (1.0 - delta)
+
+
+def delta_from_wa(wa: jax.Array) -> jax.Array:
+    """Inverse of ``wa_from_delta``: δ = 1 - 1/WA."""
+    wa = jnp.asarray(wa)
+    return 1.0 - 1.0 / wa
+
+
+def delta_from_op_ratio(r: jax.Array, *, iters: int = 80) -> jax.Array:
+    """Invert eq. (3): given r = LBA/PBA in (0,1), find δ in (0,1) with
+    (δ-1)/ln(δ) = r.
+
+    f(δ) = (δ-1)/ln(δ) is strictly increasing on (0,1) with range (0,1), so a
+    fixed-count bisection converges to machine precision and is jit-friendly
+    (no data-dependent control flow).
+    """
+    r = jnp.asarray(r)
+    dtype = jnp.result_type(r, jnp.float32)
+    lo = jnp.full(jnp.shape(r), 1e-9, dtype)
+    hi = jnp.full(jnp.shape(r), 1.0 - 1e-9, dtype)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_low = op_ratio_from_delta(mid) < r  # need bigger δ
+        lo = jnp.where(too_low, mid, lo)
+        hi = jnp.where(too_low, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def wa_from_op_ratio(r: jax.Array, *, iters: int = 80) -> jax.Array:
+    """WA at equilibrium for a uniform workload with over-provisioning ratio r."""
+    return wa_from_delta(delta_from_op_ratio(r, iters=iters))
+
+
+def op_ratio_from_wa(wa: jax.Array) -> jax.Array:
+    """r = LBA/PBA needed to hit a target equilibrium WA (closed form via eq. 3)."""
+    return op_ratio_from_delta(delta_from_wa(wa))
+
+
+# ---------------------------------------------------------------------------
+# Appendix A: Lambert-W form (eq. 9), kept for fidelity + cross-validation.
+# ---------------------------------------------------------------------------
+
+def lambertw0(a: jax.Array, *, iters: int = 32) -> jax.Array:
+    """Principal branch W0 of the Lambert W function, via Halley iteration.
+
+    Valid for a >= -1/e. For the paper's use a ∈ (-1/e, 0), where W0 ∈ (-1, 0).
+    Fixed iteration count keeps it jit-friendly; 32 Halley steps converge to
+    float64 precision everywhere we evaluate it.
+    """
+    a = jnp.asarray(a)
+    dtype = jnp.result_type(a, jnp.float32)
+    a = a.astype(dtype)
+    e = jnp.exp(jnp.asarray(1.0, dtype))
+    # Initial guess: series near the branch point -1/e, else log-based guess.
+    p = jnp.sqrt(jnp.maximum(2.0 * (e * a + 1.0), 0.0))
+    w_branch = -1.0 + p - p * p / 3.0  # expansion around a = -1/e
+    w_log = jnp.where(a > 0, jnp.log1p(a), a)  # fine for small |a|
+    w = jnp.where(a < -0.2, w_branch, w_log)
+
+    def body(_, w):
+        ew = jnp.exp(w)
+        f = w * ew - a
+        # Halley: w' = w - f / (ew*(w+1) - (w+2)*f/(2w+2)). The denominator
+        # vanishes at the branch point w = -1 (f = 0 there too): guard the
+        # 0/0 by skipping the update when already converged.
+        denom = ew * (w + 1.0) - (w + 2.0) * f / (2.0 * w + 2.0)
+        step = jnp.where(jnp.abs(denom) > 1e-30, f / denom, 0.0)
+        return jnp.where(jnp.abs(f) > 0.0, w - step, w)
+
+    return jax.lax.fori_loop(0, iters, body, w)
+
+
+def delta_from_op_ratio_lambertw(r: jax.Array) -> jax.Array:
+    """Eq. (9): δ = -r · W0(-(1/r)·e^(-1/r)).
+
+    The W-1 branch would return the trivial root δ = 1; W0 gives the
+    equilibrium root in (0,1). Equivalent to ``delta_from_op_ratio`` (tested).
+    """
+    r = jnp.asarray(r)
+    z = 1.0 / r  # PBA/LBA > 1
+    return -r * lambertw0(-z * jnp.exp(-z))

@@ -1,0 +1,143 @@
+"""Block-manager presets (paper §6 comparison points) + run helpers."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.simulator import SimContext, run
+from repro.core.ssd import Geometry, ManagerConfig, init_state
+from repro.core.workloads import Phase
+
+
+def wolf(**kw) -> ManagerConfig:
+    """The paper's system: measured stats, closed-form OP allocation,
+    movement operations, greedy GC."""
+    return ManagerConfig(
+        name="wolf", alloc_mode="wolf", gc_policy="greedy",
+        movement_ops=True, td_mode="static", **kw
+    )
+
+
+def wolf_dynamic(**kw) -> ManagerConfig:
+    """Wolf with dynamic group creation/merging + bloom detector (TPC-C)."""
+    return ManagerConfig(
+        name="wolf-dynamic", alloc_mode="wolf", gc_policy="greedy",
+        movement_ops=True, td_mode="bloom", dynamic_groups=True,
+        max_groups=12, **kw
+    )
+
+
+def fdp(**kw) -> ManagerConfig:
+    """Stoica et al. [20] as characterized in the paper: fixed group order
+    with ASSUMED frequencies (hit rate doubles per group), LRU GC, no
+    movement operations; pages move between groups instead."""
+    return ManagerConfig(
+        name="fdp", alloc_mode="fdp_assumed", gc_policy="lru",
+        movement_ops=False, td_mode="fdp", **kw
+    )
+
+
+def single_group(**kw) -> ManagerConfig:
+    """Grey-line baseline: all pages mixed in one group."""
+    return ManagerConfig(
+        name="single", alloc_mode="single", gc_policy="greedy",
+        movement_ops=False, td_mode="static", max_groups=kw.pop("max_groups", 1),
+        **kw
+    )
+
+
+def wolf_lru(**kw) -> ManagerConfig:
+    """Ablation for Fig. 2 (greedy vs LRU under movement operations)."""
+    return ManagerConfig(
+        name="wolf-lru", alloc_mode="wolf", gc_policy="lru",
+        movement_ops=True, td_mode="static", **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    app: np.ndarray  # cumulative application writes
+    mig: np.ndarray  # cumulative migrations
+    state: dict
+
+    @property
+    def wa_total(self) -> float:
+        return float((self.app[-1] + self.mig[-1]) / max(self.app[-1], 1))
+
+    def wa_curve(self, window: int = 2000) -> np.ndarray:
+        """Windowed WA over time: (Δapp+Δmig)/Δapp per window."""
+        app, mig = self.app, self.mig
+        idx = np.arange(window, len(app), window)
+        d_app = app[idx] - app[idx - window]
+        d_mig = mig[idx] - mig[idx - window]
+        return np.where(d_app > 0, (d_app + d_mig) / np.maximum(d_app, 1), 1.0)
+
+
+def fdp_assumed_arrays(phase: Phase, g_max: int):
+    """FDP's FIXED assumptions, taken from the initial phase: group i+1 is
+    2× hotter per page (paper §6.2 green line); sizes from the phase."""
+    n = min(len(phase.sizes), g_max)
+    sizes = np.asarray(phase.sizes[:n], np.float64)
+    rate = 2.0 ** np.arange(n)  # assumed per-page rates, relative
+    agg = sizes * rate
+    assumed_p = np.zeros(g_max, np.float32)
+    assumed_p[:n] = agg / agg.sum()
+    fdp_rate = np.zeros(g_max, np.float32)
+    fdp_rate[:n] = (assumed_p[:n] / sizes).astype(np.float32)
+    return assumed_p, fdp_rate
+
+
+def simulate(
+    geom: Geometry,
+    mcfg: ManagerConfig,
+    phases: list[Phase],
+    *,
+    seed: int = 0,
+    init_p_from_phase: bool = True,
+) -> RunResult:
+    """Run a (possibly multi-phase) workload under a manager preset."""
+    from repro.core.simulator import init_bloom
+
+    rng = np.random.default_rng(seed)
+    first = phases[0]
+    n_groups = 1 if mcfg.max_groups == 1 else len(first.sizes)
+    page_group = (
+        np.zeros(geom.lba_pages, np.int32)
+        if n_groups == 1
+        else first.page_group()
+    )
+    st = init_state(geom, mcfg, page_group, n_groups)
+    if mcfg.td_mode == "bloom":
+        ctx = SimContext(geom, mcfg, n_groups)
+        st = init_bloom(ctx, st)
+    if init_p_from_phase and n_groups > 1:
+        import jax.numpy as jnp
+
+        p0 = np.zeros(mcfg.max_groups, np.float32)
+        p0[: len(first.probs)] = first.probs
+        # convert aggregate probability → expected writes per interval scale
+        st = dict(st)
+        ctx0 = SimContext(geom, mcfg, n_groups)
+        st["grp_p"] = jnp.asarray(p0)
+    ctx = SimContext(geom, mcfg, n_groups)
+
+    assumed_p, fdp_rate = fdp_assumed_arrays(first, mcfg.max_groups)
+    apps, migs = [], []
+    for phase in phases:
+        lbas = phase.sample(rng)
+        page_rate = (
+            phase.page_rate()
+            if n_groups > 1
+            else np.full(geom.lba_pages, 1.0 / geom.lba_pages, np.float32)
+        )
+        st, trace = run(
+            ctx, st, lbas,
+            page_rate=page_rate, assumed_p=assumed_p, fdp_rate=fdp_rate,
+        )
+        apps.append(np.asarray(trace["app"]))
+        migs.append(np.asarray(trace["mig"]))
+    return RunResult(np.concatenate(apps), np.concatenate(migs), st)

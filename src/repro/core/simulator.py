@@ -1,0 +1,575 @@
+"""Write-granularity SSD simulator (jittable, lax.scan over writes).
+
+One scan step = one application write:
+  1. invalidate the page's old physical slot,
+  2. pick the target group (temperature detection, §5.6 / oracle),
+  3. garbage-collect inside the group if it's out of budgeted space (§5.4),
+  4. append the page to the group's active block,
+  5. every h writes: interval bookkeeping (§5.1) — EWMA update frequencies,
+     re-allocate over-provisioning (§5.5), create/merge groups (§5.2),
+  6. movement operations (§5.3): ≤1 proactive compaction GC per step on the
+     most block-surplus group, donating redeemed blocks to the pool.
+
+GC migrations re-enter the same write path (so migrated pages can be demoted
+by the detector, as in Listing 1/3 of the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import (
+    allocate_by_frequency,
+    allocate_by_size,
+    allocate_closed_form,
+)
+from repro.core.ssd import CLOSED, FREE, OPEN, Geometry, ManagerConfig
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class SimContext:
+    """Static context threaded through the jitted step."""
+
+    geom: Geometry
+    mcfg: ManagerConfig
+    n_groups: int  # initial groups (may grow in dynamic mode)
+
+    @property
+    def h(self) -> int:
+        return max(16, int(self.geom.lba_pages * self.mcfg.interval_frac))
+
+    @property
+    def f_min_pages(self) -> int:
+        return self.geom.n_luns * self.geom.pages_per_block
+
+
+# ---------------------------------------------------------------------------
+# primitive state updates
+# ---------------------------------------------------------------------------
+
+def _pop_free_block(st, g):
+    """Claim a FREE block for group g (becomes its OPEN active block)."""
+    free_mask = st["state"] == FREE
+    blk = jnp.argmax(free_mask)  # reserve logic upstream guarantees ≥1
+    ok = free_mask[blk]
+    st = dict(st)
+    st["state"] = st["state"].at[blk].set(jnp.where(ok, OPEN, st["state"][blk]))
+    st["group_of"] = st["group_of"].at[blk].set(
+        jnp.where(ok, g, st["group_of"][blk])
+    )
+    st["fill"] = st["fill"].at[blk].set(jnp.where(ok, 0, st["fill"][blk]))
+    st["grp_phys"] = st["grp_phys"].at[g].add(jnp.where(ok, 1, 0))
+    # LRU clock: a block's age is its claim time — "least recently erased"
+    # degenerates into cleaning freshly-filled (never-erased) blocks if ages
+    # only advance on erase.
+    st["stamp"] = st["stamp"].at[blk].set(jnp.where(ok, st["clock"], st["stamp"][blk]))
+    st["clock"] = st["clock"] + jnp.where(ok, 1, 0)
+    return st, blk, ok
+
+
+def _write_page(ctx: SimContext, st, lba, g, *, is_migration: bool):
+    """Append page `lba` to group g's active block (allocating if needed)."""
+    b = ctx.geom.pages_per_block  # noqa: shadows module-level nothing
+    blk = st["active_blk"][g]
+    blk_full = jnp.where(blk >= 0, st["fill"][jnp.maximum(blk, 0)] >= b, True)
+
+    def alloc(st):
+        st = dict(st)
+        old = st["active_blk"][g]
+        # seal the previous active block
+        st["state"] = st["state"].at[jnp.maximum(old, 0)].set(
+            jnp.where(old >= 0, CLOSED, st["state"][jnp.maximum(old, 0)])
+        )
+        st, new_blk, ok = _pop_free_block(st, g)
+        st["active_blk"] = st["active_blk"].at[g].set(
+            jnp.where(ok, new_blk, old)
+        )
+        return st
+
+    st = jax.lax.cond(blk_full, alloc, lambda s: dict(s), st)
+    blk = st["active_blk"][g]
+    slot = st["fill"][blk]
+    # overflow guard: if the pool was empty the active block may still be
+    # full — drop the write and count it (tests assert this never fires).
+    ok = (blk >= 0) & (slot < b)
+    blk_c = jnp.maximum(blk, 0)
+    slot_c = jnp.minimum(slot, b - 1)
+    st = dict(st)
+    st["fill"] = st["fill"].at[blk_c].add(jnp.where(ok, 1, 0))
+    st["slot_lba"] = st["slot_lba"].at[blk_c, slot_c].set(
+        jnp.where(ok, lba, st["slot_lba"][blk_c, slot_c])
+    )
+    st["valid"] = st["valid"].at[blk_c, slot_c].set(
+        jnp.where(ok, True, st["valid"][blk_c, slot_c])
+    )
+    st["live"] = st["live"].at[blk_c].add(jnp.where(ok, 1, 0))
+    st["map_blk"] = st["map_blk"].at[lba].set(jnp.where(ok, blk, -1))
+    st["map_slot"] = st["map_slot"].at[lba].set(jnp.where(ok, slot, -1))
+    st["grp_size"] = st["grp_size"].at[g].add(jnp.where(ok, 1, 0))
+    st["n_dropped"] = st["n_dropped"] + jnp.where(ok, 0, 1)
+    if is_migration:
+        st["n_mig"] = st["n_mig"] + jnp.where(ok, 1, 0)
+    return st
+
+
+def _invalidate(st, lba):
+    blk = st["map_blk"][lba]
+    slot = st["map_slot"][lba]
+    has = blk >= 0
+    blk_c = jnp.maximum(blk, 0)
+    old_g = st["group_of"][blk_c]
+    st = dict(st)
+    st["valid"] = st["valid"].at[blk_c, slot].set(
+        jnp.where(has, False, st["valid"][blk_c, slot])
+    )
+    st["live"] = st["live"].at[blk_c].add(jnp.where(has, -1, 0))
+    st["grp_size"] = st["grp_size"].at[jnp.maximum(old_g, 0)].add(
+        jnp.where(has & (old_g >= 0), -1, 0)
+    )
+    return st, jnp.where(has, old_g, 0)
+
+
+# ---------------------------------------------------------------------------
+# garbage collection (one victim) — §5.4
+# ---------------------------------------------------------------------------
+
+def _select_victim(ctx: SimContext, st, g):
+    closed = (st["state"] == CLOSED) & (st["group_of"] == g)
+    if ctx.mcfg.gc_policy == "lru":
+        score = jnp.where(closed, st["stamp"], INT_MAX)
+    else:  # greedy
+        score = jnp.where(closed, st["live"], INT_MAX)
+    victim = jnp.argmin(score)
+    ok = closed[victim]
+    if ctx.mcfg.gc_policy == "greedy":
+        # a fully-live victim frees nothing: skip (movement-op no-op guard)
+        ok = ok & (st["live"][victim] < ctx.geom.pages_per_block)
+    return victim, ok
+
+
+def _gc_one(ctx: SimContext, st, g, demote_fn):
+    """GC one victim in group g; migrate live pages via the write path.
+
+    demote_fn(st, lba, g) -> target group for a migrated page (§5.6 demotion:
+    bloom/fdp detectors may demote during GC; static keeps g).
+    """
+    victim, ok = _select_victim(ctx, st, g)
+    # migrations may need one fresh block beyond the active's free slots:
+    # never start a GC with an empty pool (callers keep it ≥ 2).
+    ok = ok & (jnp.sum(st["state"] == FREE) >= 1)
+
+    def do(st):
+        b = ctx.geom.pages_per_block
+
+        def body(j, st):
+            lba = st["slot_lba"][victim, j]
+            is_live = st["valid"][victim, j]
+
+            def mig(st):
+                st = dict(st)
+                st["valid"] = st["valid"].at[victim, j].set(False)
+                st["live"] = st["live"].at[victim].add(-1)
+                g_tgt = demote_fn(st, lba, g)
+                st["grp_size"] = st["grp_size"].at[g].add(-1)
+                return _write_page(ctx, st, lba, g_tgt, is_migration=True)
+
+            return jax.lax.cond(is_live, mig, lambda s: dict(s), st)
+
+        st = jax.lax.fori_loop(0, b, body, dict(st))
+        # erase
+        st["state"] = st["state"].at[victim].set(FREE)
+        st["group_of"] = st["group_of"].at[victim].set(-1)
+        st["fill"] = st["fill"].at[victim].set(0)
+        st["live"] = st["live"].at[victim].set(0)
+        st["slot_lba"] = st["slot_lba"].at[victim].set(-1)
+        st["valid"] = st["valid"].at[victim].set(False)
+        st["stamp"] = st["stamp"].at[victim].set(st["clock"])
+        st["clock"] = st["clock"] + 1
+        st["grp_phys"] = st["grp_phys"].at[g].add(-1)
+        st["n_erase"] = st["n_erase"] + 1
+        return st
+
+    return jax.lax.cond(ok, do, lambda s: dict(s), st)
+
+
+# ---------------------------------------------------------------------------
+# over-provisioning allocation (interval) — §5.5
+# ---------------------------------------------------------------------------
+
+def _recompute_alloc(ctx: SimContext, st, assumed_p=None):
+    geom, mcfg = ctx.geom, ctx.mcfg
+    b = geom.pages_per_block
+    active = st["grp_active"]
+    s = jnp.where(active, st["grp_size"].astype(jnp.float32), 0.0)
+    s = jnp.maximum(s, jnp.where(active, 1.0, 0.0))
+    if mcfg.alloc_mode == "fdp_assumed":
+        p = jnp.where(active, assumed_p, 0.0)
+    else:
+        p = jnp.where(active, st["grp_p"], 0.0)
+    p = p / jnp.maximum(p.sum(), 1e-9)
+    # usable OP = spare pages beyond logical content, minus the GC reserve
+    # and one block per active group (absorbs the per-group ceil slack so
+    # the budgets can never collectively over-claim the pool)
+    n_active = active.sum()
+    op_total = (
+        jnp.asarray(geom.pba_pages, jnp.float32)
+        - (mcfg.gc_reserve_blocks + 1 + n_active) * b
+        - s.sum()
+    )
+
+    if mcfg.alloc_mode in ("wolf", "fdp_assumed", "optimal"):
+        op = allocate_closed_form(
+            s, p, op_total,
+            cold_rule=True,
+            cold_hit_rate_frac=mcfg.cold_hit_rate_frac,
+            cold_op_frac=mcfg.cold_op_frac,
+        )
+    elif mcfg.alloc_mode == "size":
+        op = allocate_by_size(s, op_total)
+    elif mcfg.alloc_mode == "freq":
+        op = allocate_by_frequency(p, op_total)
+    else:  # single group / no reallocation
+        op = allocate_by_size(s, op_total)
+    alloc_blocks = jnp.ceil((s + op) / b).astype(jnp.int32)
+    alloc_blocks = jnp.where(active, jnp.maximum(alloc_blocks, 1), 0)
+    st = dict(st)
+    st["grp_alloc"] = alloc_blocks
+    return st
+
+
+def _interval_update(ctx: SimContext, st, assumed_p):
+    mcfg = ctx.mcfg
+    st = dict(st)
+    u = st["grp_writes"].astype(jnp.float32) / ctx.h
+    active = st["grp_active"]
+    st["grp_p"] = jnp.where(
+        active, st["grp_p"] * (1 - mcfg.ewma_a) + mcfg.ewma_a * u, 0.0
+    )
+    st["grp_writes"] = jnp.zeros_like(st["grp_writes"])
+    st["interval"] = st["interval"] + 1
+    st["cooldown"] = jnp.maximum(st["cooldown"] - 1, 0)
+    if mcfg.dynamic_groups:
+        st = _maybe_create_or_merge(ctx, st)
+    st = _recompute_alloc(ctx, st, assumed_p)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# group creation / merging (dynamic mode) — §5.2
+# ---------------------------------------------------------------------------
+
+def _hit_rates(st):
+    s = jnp.maximum(st["grp_size"].astype(jnp.float32), 1.0)
+    hr = st["grp_p"] / s
+    return jnp.where(st["grp_active"], hr, -1.0)
+
+
+def _maybe_create_or_merge(ctx: SimContext, st):
+    mcfg = ctx.mcfg
+    hr = _hit_rates(st)
+    order = jnp.argsort(-hr)  # hottest first
+    hottest, second = order[0], order[1]
+    n_active = st["grp_active"].sum()
+    can_slot = n_active < mcfg.max_groups
+    hot_ratio = hr[hottest] / jnp.maximum(hr[second], 1e-12)
+    create = (
+        can_slot
+        & (st["cooldown"] == 0)
+        & (n_active >= 2)
+        & (hot_ratio >= mcfg.q_create)
+        & (st["grp_size"][hottest] >= ctx.f_min_pages)
+    )
+
+    def do_create(st):
+        st = dict(st)
+        slot = jnp.argmin(st["grp_active"])  # first inactive slot
+        st["grp_active"] = st["grp_active"].at[slot].set(True)
+        # seed stats: half the hottest group's measured frequency
+        st["grp_p"] = st["grp_p"].at[slot].set(st["grp_p"][hottest] * 0.5)
+        st["grp_size"] = st["grp_size"].at[slot].set(0)
+        st["grp_phys"] = st["grp_phys"].at[slot].set(0)
+        st["grp_created"] = st["grp_created"].at[slot].set(st["interval"])
+        st["cooldown"] = jnp.asarray(mcfg.w_intervals, jnp.int32)
+        return st
+
+    st = jax.lax.cond(create, do_create, lambda s: dict(s), st)
+
+    # merge: coldest adjacent pair that converged, or an undersized group
+    hr = _hit_rates(st)
+    order = jnp.argsort(-hr)
+    n_active = st["grp_active"].sum()
+    # adjacent pair ratios in hit-rate order
+    hr_sorted = hr[order]
+    idx = jnp.arange(hr.shape[0])
+    valid_pair = (idx + 1 < n_active)
+    ratio = hr_sorted / jnp.maximum(jnp.roll(hr_sorted, -1), 1e-12)
+    converged = valid_pair & (ratio < 1.3) & (hr_sorted > 0)
+    tiny = valid_pair & (
+        st["grp_size"][order] < jnp.asarray(ctx.f_min_pages, jnp.int32)
+    ) & (jnp.roll(hr_sorted, -1) > 0)
+    mergeable = converged | tiny
+    pair_i = jnp.argmax(mergeable)
+    do_merge = (
+        mergeable[pair_i] & (st["cooldown"] == 0) & (n_active > 2)
+    )
+
+    def merge(st):
+        st = dict(st)
+        g_from = order[pair_i]          # hotter of the pair
+        g_to = order[pair_i + 1]        # absorbed into the colder
+        # relabel blocks (the paper: a merge is logical)
+        st["group_of"] = jnp.where(
+            st["group_of"] == g_from, g_to, st["group_of"]
+        )
+        # seal g_from's active block (no longer reachable)
+        ab = st["active_blk"][g_from]
+        st["state"] = st["state"].at[jnp.maximum(ab, 0)].set(
+            jnp.where(ab >= 0, CLOSED, st["state"][jnp.maximum(ab, 0)])
+        )
+        st["active_blk"] = st["active_blk"].at[g_from].set(-1)
+        st["grp_size"] = st["grp_size"].at[g_to].add(st["grp_size"][g_from])
+        st["grp_phys"] = st["grp_phys"].at[g_to].add(st["grp_phys"][g_from])
+        st["grp_p"] = st["grp_p"].at[g_to].add(st["grp_p"][g_from])
+        st["grp_writes"] = st["grp_writes"].at[g_to].add(st["grp_writes"][g_from])
+        for key in ("grp_size", "grp_phys", "grp_p", "grp_writes"):
+            st[key] = st[key].at[g_from].set(0)
+        st["grp_active"] = st["grp_active"].at[g_from].set(False)
+        st["cooldown"] = jnp.asarray(mcfg.w_intervals, jnp.int32)
+        return st
+
+    return jax.lax.cond(do_merge, merge, lambda s: dict(s), st)
+
+
+# ---------------------------------------------------------------------------
+# temperature detection — §5.6 (+ oracle modes for §6 experiments)
+# ---------------------------------------------------------------------------
+
+def _sgv_neighbors(st):
+    """hotter_of[g], colder_of[g] by current hit-rate order."""
+    hr = _hit_rates(st)
+    g_max = hr.shape[0]
+    # rank[g] = position in descending order
+    order = jnp.argsort(-hr)
+    rank = jnp.zeros(g_max, jnp.int32).at[order].set(jnp.arange(g_max))
+    n_active = st["grp_active"].sum()
+
+    def neighbor(g, delta):
+        r = rank[g] + delta
+        r = jnp.clip(r, 0, n_active - 1)
+        return order[r]
+
+    return neighbor
+
+
+def _target_group_app(ctx: SimContext, st, lba, cur_g, page_rate, bloom):
+    """Target group for an application update of `lba` living in cur_g."""
+    mode = ctx.mcfg.td_mode
+    if mode == "static":
+        return st, cur_g
+    neighbor = _sgv_neighbors(st)
+    if mode == "fdp":
+        # fixed assumed per-page rate bands: promote if ≥2× the group's
+        # assumed rate (paper §5/§6: FDP's fixed-order assumption)
+        assumed = bloom["fdp_rate"]  # [G] assumed per-page rate
+        r = page_rate[lba]
+        promote = r > 2.0 * assumed[cur_g]
+        return st, jnp.where(promote, neighbor(cur_g, -1), cur_g)
+    # bloom (§5.6): in both filters → promote
+    st, in_both = _bloom_update(ctx, st, lba, cur_g)
+    return st, jnp.where(in_both, _sgv_neighbors(st)(cur_g, -1), cur_g)
+
+
+def _target_group_gc(ctx: SimContext, st, lba, cur_g, page_rate, bloom):
+    mode = ctx.mcfg.td_mode
+    if mode == "static":
+        return cur_g
+    neighbor = _sgv_neighbors(st)
+    if mode == "fdp":
+        assumed = bloom["fdp_rate"]
+        r = page_rate[lba]
+        demote = r < 0.5 * assumed[cur_g]
+        return jnp.where(demote, neighbor(cur_g, +1), cur_g)
+    # bloom: in neither filter during a migration → demote
+    in_active = _bloom_query(ctx, st["bloom_active"], lba, cur_g)
+    in_passive = _bloom_query(ctx, st["bloom_passive"], lba, cur_g)
+    return jnp.where(~in_active & ~in_passive, neighbor(cur_g, +1), cur_g)
+
+
+# -- bloom filter pair (per group) ------------------------------------------
+
+def _bloom_hashes(ctx: SimContext, lba):
+    bits = ctx.geom.lba_pages * ctx.mcfg.bloom_bits_per_page // ctx.mcfg.max_groups
+    bits = max(bits, 64)
+    u = lba.astype(jnp.uint32)
+    h1 = (u * jnp.uint32(2654435761)) % jnp.uint32(bits)
+    h2 = (u * jnp.uint32(40503) + jnp.uint32(99991)) % jnp.uint32(bits)
+    return h1.astype(jnp.int32), h2.astype(jnp.int32), bits
+
+
+def _bloom_query(ctx, filt, lba, g):
+    h1, h2, _ = _bloom_hashes(ctx, lba)
+    return filt[g, h1] & filt[g, h2]
+
+
+def _bloom_update(ctx: SimContext, st, lba, g):
+    """Insert lba into group g's active filter; rotate when the group's
+    write interval (= group size) elapses. Returns (st, was_in_both)."""
+    h1, h2, _ = _bloom_hashes(ctx, lba)
+    in_active = st["bloom_active"][g, h1] & st["bloom_active"][g, h2]
+    in_passive = st["bloom_passive"][g, h1] & st["bloom_passive"][g, h2]
+    st = dict(st)
+    st["bloom_active"] = (
+        st["bloom_active"].at[g, h1].set(True).at[g, h2].set(True)
+    )
+    st["bloom_writes"] = st["bloom_writes"].at[g].add(1)
+    rotate = st["bloom_writes"][g] >= jnp.maximum(st["grp_size"][g], 64)
+
+    def do_rotate(st):
+        st = dict(st)
+        st["bloom_passive"] = st["bloom_passive"].at[g].set(st["bloom_active"][g])
+        st["bloom_active"] = st["bloom_active"].at[g].set(False)
+        st["bloom_writes"] = st["bloom_writes"].at[g].set(0)
+        return st
+
+    st = jax.lax.cond(rotate, do_rotate, lambda s: dict(s), st)
+    return st, in_active & in_passive
+
+
+# ---------------------------------------------------------------------------
+# the step + runner
+# ---------------------------------------------------------------------------
+
+def make_step(ctx: SimContext, assumed_p, fdp_rate, page_rate):
+    """Build the per-write scan step. assumed_p/fdp_rate: [G] policy arrays
+    (FDP's fixed assumptions); page_rate: [LBA] true per-page update rates
+    (oracle detector input). All may be traced values."""
+    geom, mcfg = ctx.geom, ctx.mcfg
+    b = geom.pages_per_block
+    bloom_ctx = {"fdp_rate": fdp_rate}
+
+    def demote_fn(st, lba, g):
+        return _target_group_gc(ctx, st, lba, g, page_rate, bloom_ctx)
+
+    def step(st, lba):
+        st, old_g = _invalidate(st, lba)
+        st, g = _target_group_app(ctx, st, lba, old_g, page_rate, bloom_ctx)
+        g = jnp.where(st["grp_active"][g], g, old_g)
+
+        # GC when the group needs a new block it is not entitled to, or the
+        # pool is at reserve.
+        blk = st["active_blk"][g]
+        needs_block = jnp.where(
+            blk >= 0, st["fill"][jnp.maximum(blk, 0)] >= b, True
+        )
+        free_blocks = jnp.sum(st["state"] == FREE)
+        over_budget = st["grp_phys"][g] >= st["grp_alloc"][g]
+        low_pool = free_blocks <= mcfg.gc_reserve_blocks
+        do_gc = needs_block & (over_budget | low_pool)
+        st = jax.lax.cond(
+            do_gc, lambda s: _gc_one(ctx, s, g, demote_fn), lambda s: dict(s), st
+        )
+
+        # emergency valve: if the pool is (nearly) empty, greedily reclaim
+        # from the fullest group until headroom returns (bounded loop; only
+        # fires when a policy briefly overdraws its budget).
+        def needs_air(carry):
+            s, tries = carry
+            return (jnp.sum(s["state"] == FREE) < 2) & (tries < 4)
+
+        def reclaim(carry):
+            s, tries = carry
+            # global greedy: the best victim anywhere (its group pays)
+            closed = s["state"] == CLOSED
+            score = jnp.where(closed, s["live"], INT_MAX)
+            victim = jnp.argmin(score)
+            g_v = jnp.maximum(s["group_of"][victim], 0)
+            greedy_ctx = dataclasses.replace(
+                ctx, mcfg=dataclasses.replace(ctx.mcfg, gc_policy="greedy")
+            )
+            return _gc_one(greedy_ctx, s, g_v, demote_fn), tries + 1
+
+        st, _ = jax.lax.while_loop(needs_air, reclaim, (st, 0))
+
+        st = _write_page(ctx, st, lba, g, is_migration=False)
+        st["n_app"] = st["n_app"] + 1
+        st["grp_writes"] = st["grp_writes"].at[g].add(1)
+
+        # movement operations (§5.3): one compaction GC per step on the most
+        # surplus group, donating the redeemed block to the pool.
+        if mcfg.movement_ops:
+            surplus = jnp.where(
+                st["grp_active"], st["grp_phys"] - st["grp_alloc"], -INT_MAX
+            )
+            g_s = jnp.argmax(surplus)
+            pool_ok = jnp.sum(st["state"] == FREE) >= 2  # migration headroom
+            st = jax.lax.cond(
+                (surplus[g_s] >= 1) & pool_ok,
+                lambda s: _gc_one(ctx, s, g_s, demote_fn),
+                lambda s: dict(s),
+                st,
+            )
+
+        # interval completion (§5.1)
+        is_interval = (st["n_app"] % ctx.h) == 0
+        st = jax.lax.cond(
+            is_interval,
+            lambda s: _interval_update(ctx, s, assumed_p),
+            lambda s: dict(s),
+            st,
+        )
+        return st, (st["n_app"], st["n_mig"])
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _run_jit(ctx: SimContext, st, lbas, page_rate, assumed_p, fdp_rate):
+    step = make_step(ctx, assumed_p, fdp_rate, page_rate)
+    return jax.lax.scan(step, st, lbas)
+
+
+def run(ctx: SimContext, st, lbas, *, page_rate=None, assumed_p=None, fdp_rate=None):
+    """Run the simulator over a segment of writes.
+
+    lbas: int32 [T]; page_rate: float32 [LBA] true per-page update rates
+    (oracle detector modes). Returns (final_state, trace dict of CUMULATIVE
+    counters [T]) — segment the workload (e.g. at a frequency swap) by
+    calling run() repeatedly with updated oracle arrays.
+    """
+    lbas = jnp.asarray(lbas, jnp.int32)
+    g_max = ctx.mcfg.max_groups
+    if page_rate is None:
+        page_rate = jnp.zeros(ctx.geom.lba_pages, jnp.float32)
+    assumed_p = (
+        jnp.zeros(g_max, jnp.float32)
+        if assumed_p is None
+        else jnp.asarray(assumed_p, jnp.float32)
+    )
+    fdp_rate = (
+        jnp.zeros(g_max, jnp.float32)
+        if fdp_rate is None
+        else jnp.asarray(fdp_rate, jnp.float32)
+    )
+    st, (app, mig) = _run_jit(
+        ctx, st, lbas, jnp.asarray(page_rate, jnp.float32), assumed_p, fdp_rate
+    )
+    return st, {"app": app, "mig": mig}
+
+
+def init_bloom(ctx: SimContext, st):
+    """Size the per-group bloom filter pair (only needed for td_mode=bloom)."""
+    bits = max(
+        64,
+        ctx.geom.lba_pages * ctx.mcfg.bloom_bits_per_page // ctx.mcfg.max_groups,
+    )
+    g_max = ctx.mcfg.max_groups
+    st = dict(st)
+    st["bloom_active"] = jnp.zeros((g_max, bits), bool)
+    st["bloom_passive"] = jnp.zeros((g_max, bits), bool)
+    return st

@@ -1,0 +1,174 @@
+"""SSD geometry + simulator state (paper §3 system model).
+
+The simulator is WRITE-AMPLIFICATION-faithful, not timing-faithful: every
+figure in the paper reports WA (migrations per application write), which is
+what we reproduce. Consequences (documented in DESIGN.md):
+
+  * LUNs are kept as a static label (they set Wolf's F = LUNs·B minimum group
+    size) but placement/victim search are pool-global — per-LUN victim search
+    changes victim-search COST, not WA (§5.4).
+  * channel timing / virtual time is out of scope.
+
+State is a flat dict of jnp arrays (a pytree), so the whole simulator jits,
+checkpoints, and scans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+FREE, OPEN, CLOSED = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """Physical geometry. Defaults: a scaled-down Table-2 SSD (ratios kept)."""
+
+    n_luns: int = 8
+    blocks_per_lun: int = 64
+    pages_per_block: int = 16
+    lba_pba: float = 0.70
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_luns * self.blocks_per_lun
+
+    @property
+    def pba_pages(self) -> int:
+        return self.n_blocks * self.pages_per_block
+
+    @property
+    def lba_pages(self) -> int:
+        return int(self.pba_pages * self.lba_pba)
+
+    @property
+    def op_pages(self) -> int:
+        return self.pba_pages - self.lba_pages
+
+
+@dataclasses.dataclass(frozen=True)
+class ManagerConfig:
+    """Block-manager policy knobs. Presets in core/managers.py."""
+
+    name: str = "wolf"
+    max_groups: int = 8
+    # over-provisioning allocation: wolf | fdp_assumed | size | freq |
+    # optimal | single
+    alloc_mode: str = "wolf"
+    gc_policy: str = "greedy"  # greedy | lru
+    movement_ops: bool = True
+    # temperature detection / page targeting:
+    #   static  — page stays in its (workload-defined) group  [Wolf+oracle]
+    #   fdp     — promote on update / demote on GC vs fixed assumed bands
+    #   bloom   — two bloom filters per group (paper §5.6)
+    td_mode: str = "static"
+    dynamic_groups: bool = False  # create/merge groups (paper §5.2)
+    # paper constants
+    interval_frac: float = 0.001  # h = LBA · 0.001
+    ewma_a: float = 0.3
+    q_create: float = 2.0
+    w_intervals: int = 50
+    cold_hit_rate_frac: float = 0.05
+    cold_op_frac: float = 0.05
+    gc_reserve_blocks: int = 2
+    bloom_bits_per_page: int = 4
+
+
+def init_state(geom: Geometry, mcfg: ManagerConfig, page_group, n_groups: int):
+    """Build a pre-conditioned (fully mapped) drive.
+
+    page_group: int array [LBA] — initial group of every logical page.
+    Pages are laid out group-contiguously; leftover blocks are FREE.
+    """
+    import numpy as np
+
+    k, b, lba = geom.n_blocks, geom.pages_per_block, geom.lba_pages
+    g_max = mcfg.max_groups
+    page_group = np.asarray(page_group, np.int32)
+    assert page_group.shape == (lba,)
+    assert page_group.max() < n_groups <= g_max
+
+    order = np.argsort(page_group, kind="stable")  # group-contiguous layout
+    map_blk = np.full(lba, -1, np.int32)
+    map_slot = np.full(lba, -1, np.int32)
+    slot_lba = np.full((k, b), -1, np.int32)
+    valid = np.zeros((k, b), bool)
+    live = np.zeros(k, np.int32)
+    fill = np.zeros(k, np.int32)
+    group_of = np.full(k, -1, np.int32)
+    state_arr = np.zeros(k, np.int8)
+
+    blk = 0
+    slot = 0
+    prev_g = int(page_group[order[0]])
+    for idx in order:
+        g = int(page_group[idx])
+        if g != prev_g and slot > 0:  # group boundary → new block
+            blk += 1
+            slot = 0
+            prev_g = g
+        if slot == 0:
+            group_of[blk] = g
+            state_arr[blk] = CLOSED
+        map_blk[idx] = blk
+        map_slot[idx] = slot
+        slot_lba[blk, slot] = idx
+        valid[blk, slot] = True
+        slot += 1
+        if slot == b:
+            blk += 1
+            slot = 0
+    if slot > 0:
+        blk += 1
+    # fill levels / live counts
+    for j in range(blk):
+        live[j] = valid[j].sum()
+        fill[j] = b if state_arr[j] == CLOSED else valid[j].sum()
+    fill[:blk] = b  # partially-filled tail blocks are sealed CLOSED
+    state_arr[:blk] = CLOSED
+
+    grp_size = np.bincount(page_group, minlength=g_max).astype(np.int32)
+    grp_phys = np.bincount(group_of[group_of >= 0], minlength=g_max).astype(np.int32)
+    grp_active = np.zeros(g_max, bool)
+    grp_active[:n_groups] = True
+
+    return {
+        # page mapping
+        "map_blk": jnp.asarray(map_blk),
+        "map_slot": jnp.asarray(map_slot),
+        # block state
+        "slot_lba": jnp.asarray(slot_lba),
+        "valid": jnp.asarray(valid),
+        "live": jnp.asarray(live),
+        "fill": jnp.asarray(fill),
+        # LRU ages: initially-filled blocks aged by layout order (see
+        # simulator._pop_free_block for the claim-time clock)
+        "stamp": jnp.asarray(
+            np.where(np.arange(k) < blk, np.arange(k), 0).astype(np.int32)
+        ),
+        "state": jnp.asarray(state_arr),
+        "group_of": jnp.asarray(group_of),
+        # per-group
+        "active_blk": jnp.full(g_max, -1, jnp.int32),
+        "grp_size": jnp.asarray(grp_size),
+        "grp_phys": jnp.asarray(grp_phys),
+        "grp_p": jnp.zeros(g_max, jnp.float32),
+        "grp_writes": jnp.zeros(g_max, jnp.int32),
+        "grp_alloc": jnp.asarray(np.maximum(grp_phys, 1)),
+        "grp_active": jnp.asarray(grp_active),
+        "grp_created": jnp.zeros(g_max, jnp.int32),
+        # detector (bloom)
+        "bloom_active": jnp.zeros((g_max, 1), bool),  # resized by simulator
+        "bloom_passive": jnp.zeros((g_max, 1), bool),
+        "bloom_writes": jnp.zeros(g_max, jnp.int32),
+        # counters
+        "n_app": jnp.zeros((), jnp.int32),
+        "n_mig": jnp.zeros((), jnp.int32),
+        "n_erase": jnp.zeros((), jnp.int32),
+        "n_dropped": jnp.zeros((), jnp.int32),
+        "clock": jnp.asarray(blk, jnp.int32),
+        "interval": jnp.zeros((), jnp.int32),
+        "cooldown": jnp.zeros((), jnp.int32),
+    }

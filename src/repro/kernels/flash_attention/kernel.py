@@ -1,0 +1,180 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+Tiling: grid = (B·Hkv·G, num_q_blocks, num_kv_blocks); the KV axis is the
+minor-most ("arbitrary") grid dimension, so the fp32 online-softmax
+accumulators live in VMEM scratch and persist across KV iterations
+(output-revisiting pattern). Block shapes are (block_q, d_head) for Q/O and
+(block_kv, d_head) for K/V — multiples of 128 on the lane dim for MXU
+alignment; d_head is 64 or 128 for every assigned arch.
+
+GQA: the leading grid axis enumerates (b, h_kv, g) triples; K/V index maps
+divide by G, so KV tiles are fetched once per KV head and reused by the G
+query heads that share them (no repeat in HBM).
+
+Causal + sliding-window masking is positional data; whole KV tiles strictly
+above the diagonal (or outside the window) are skipped via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # [block_q, d]
+    k_ref,  # [block_kv, d]
+    v_ref,  # [block_kv, d]
+    o_ref,  # [block_q, d]
+    m_scr,  # [block_q] f32
+    l_scr,  # [block_q] f32
+    acc_scr,  # [block_q, d] f32
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_kv: int,
+    seq_kv: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    kv_pos = ik * block_kv + jax.lax.iota(jnp.int32, block_kv)
+
+    # tile-level skip: strictly-above-diagonal or fully-outside-window tiles
+    q_max = iq * block_q + block_q - 1
+    q_min = iq * block_q
+    tile_needed = True
+    if causal:
+        tile_needed = ik * block_kv <= q_max
+    if window > 0:
+        tile_needed = jnp.logical_and(
+            tile_needed, (ik + 1) * block_kv - 1 > q_min - window
+        )
+
+    @pl.when(tile_needed)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * sm_scale
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [block_q, block_kv]
+        mask = kv_pos[None, :] < seq_kv
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype),
+            v_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    sm_scale = d ** -0.5
+
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    # zero-pad ragged tails to block multiples: partial Pallas tiles read
+    # uninitialized memory (NaN in interpret mode) and 0·NaN would poison the
+    # masked accumulator rows.
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    sq_orig = sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    skv_orig = skv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        skv += pad_kv
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_kv)
+
+    # [B, Sq, Hkv, G, D] -> leading grid axis enumerates (b, hkv, g)
+    qg = q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4).reshape(
+        b * hkv * g, sq, d
+    )
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_kv=block_kv,
+        seq_kv=skv_orig,  # mask the zero-padded tail
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv * g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((None, block_kv, d), lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+            pl.BlockSpec((None, block_kv, d), lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv * g, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),   # l (running sum)
+            pltpu.VMEM((block_q, d), jnp.float32), # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qg, kh, vh)
+    out = out.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, sq, hq, d)[:, :sq_orig]

@@ -1,0 +1,29 @@
+"""Public op: flash_attention with automatic interpret fallback on CPU.
+
+On TPU the Pallas kernel runs natively; on CPU (tests, this container) the
+kernel body executes in interpret mode, which validates the exact same
+kernel logic against ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention as _kernel
+from .ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_kv=128):
+    return _kernel(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv,
+        interpret=not _on_tpu(),
+    )
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

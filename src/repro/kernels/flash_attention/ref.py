@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, Sq, Hq, D]
+    k: jnp.ndarray,  # [B, Skv, Hkv, D]
+    v: jnp.ndarray,  # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    return reference_attention(q, k, v, causal=causal, window=window)

@@ -1,0 +1,93 @@
+"""GC compaction (the paper's migration operation) as a Pallas TPU kernel.
+
+Wolf's movement operations pack the live token-slots of victim KV blocks
+into fresh blocks. On GPU this is a gather/scatter loop; the TPU-native
+form makes the move list a scalar-prefetch operand so each (src→dst) copy
+is a pair of DMA'd BlockSpec tiles — Pallas pipelines the copies.
+
+Grid = (M,) moves. Input tile = pool[src_block[i], src_slot[i]] (one token
+slot, [Hkv, D]); output tile = pool[dst_block[i], dst_slot[i]]. The output
+aliases the input pool (donate) so untouched slots are preserved.
+
+No-op rows (src_block < 0) redirect to slot (0, 0) of block dst_block[i]=src
+— handled by clamping and a copy-through of the existing contents.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compact_kernel(moves_ref, src_ref, dst_cur_ref, out_ref):
+    i = pl.program_id(0)
+    ok = moves_ref[i, 0] >= 0
+
+    @pl.when(ok)
+    def _move():
+        out_ref[...] = src_ref[...]
+
+    @pl.when(jnp.logical_not(ok))
+    def _keep():
+        out_ref[...] = dst_cur_ref[...]
+
+
+def _run(pool, moves, *, interpret):
+    m = moves.shape[0]
+    n, p, hkv, d = pool.shape
+
+    def src_map(i, moves_ref):
+        ok = moves_ref[i, 0] >= 0
+        return (
+            jnp.where(ok, moves_ref[i, 0], 0),
+            jnp.where(ok, moves_ref[i, 1], 0),
+            0,
+            0,
+        )
+
+    def dst_map(i, moves_ref):
+        ok = moves_ref[i, 0] >= 0
+        blk = jnp.where(ok, moves_ref[i, 2], 0)
+        slot = jnp.where(ok, moves_ref[i, 3], 0)
+        return (blk, slot, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, None, hkv, d), src_map),
+            pl.BlockSpec((None, None, hkv, d), dst_map),
+        ],
+        out_specs=pl.BlockSpec((None, None, hkv, d), dst_map),
+    )
+    out = pl.pallas_call(
+        _compact_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},  # pool aliases the output
+        interpret=interpret,
+    )(moves, pool, pool)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gc_compact(
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    src_block: jax.Array,
+    src_slot: jax.Array,
+    dst_block: jax.Array,
+    dst_slot: jax.Array,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    moves = jnp.stack(
+        [src_block, src_slot, dst_block, dst_slot], axis=1
+    ).astype(jnp.int32)
+    k_new = _run(k_pool, moves, interpret=interpret)
+    v_new = _run(v_pool, moves, interpret=interpret)
+    return k_new, v_new

@@ -1,0 +1,18 @@
+"""Public op: gc_compact (interpret fallback off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import gc_compact as _kernel
+from .ref import gc_compact_ref
+
+
+def gc_compact(k_pool, v_pool, src_block, src_slot, dst_block, dst_slot):
+    return _kernel(
+        k_pool, v_pool, src_block, src_slot, dst_block, dst_slot,
+        interpret=jax.default_backend() != "tpu",
+    )
+
+
+__all__ = ["gc_compact", "gc_compact_ref"]

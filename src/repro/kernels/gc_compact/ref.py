@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for KV-block compaction (GC migration)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gc_compact_ref(
+    k_pool: jax.Array,  # [N, P, Hkv, D]
+    v_pool: jax.Array,  # [N, P, Hkv, D]
+    src_block: jax.Array,  # [M] int32 source block per live slot (-1 = skip)
+    src_slot: jax.Array,  # [M] int32
+    dst_block: jax.Array,  # [M] int32 destination block
+    dst_slot: jax.Array,  # [M] int32
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter live slots (src_block, src_slot) -> (dst_block, dst_slot).
+
+    A no-op row (src_block < 0) leaves the pool untouched.
+    """
+    ok = src_block >= 0
+    sb = jnp.maximum(src_block, 0)
+    ss = jnp.maximum(src_slot, 0)
+    db = jnp.where(ok, dst_block, 0)
+    ds = jnp.where(ok, dst_slot, 0)
+    k_rows = k_pool[sb, ss]  # [M, Hkv, D]
+    v_rows = v_pool[sb, ss]
+    k_new = k_pool.at[db, ds].set(
+        jnp.where(ok[:, None, None], k_rows, k_pool[db, ds])
+    )
+    v_new = v_pool.at[db, ds].set(
+        jnp.where(ok[:, None, None], v_rows, v_pool[db, ds])
+    )
+    return k_new, v_new

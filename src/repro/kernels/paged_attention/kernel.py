@@ -1,0 +1,155 @@
+"""Paged decode attention as a Pallas TPU kernel (block-table indirection).
+
+This is the device half of Wolf-KV: the host-side block manager (kvcache/)
+owns block tables whose pages the paper's allocator places into temperature
+groups; this kernel consumes those tables directly, so compaction /
+movement operations never have to materialize a contiguous cache.
+
+TPU adaptation of the vLLM GPU kernel: instead of per-warp gather loops, the
+block table is a SCALAR-PREFETCH operand (pltpu.PrefetchScalarGridSpec) and
+each grid step's BlockSpec index_map dereferences it — the page gather
+becomes the kernel's input DMA, which Pallas double-buffers automatically
+(HBM→VMEM overlap, the TPU-native analogue of coalesced gather warps).
+
+Grid = (B, Hkv, num_pages); online softmax accumulates in VMEM scratch over
+the page axis ("arbitrary" minor dim, output revisited on the last page).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    # scalar-prefetch operands
+    tables_ref,  # [B, M] int32
+    lengths_ref,  # [B] int32
+    # array operands
+    q_ref,  # [G, D] queries of this (b, hkv)
+    k_ref,  # [P, D] one page of keys
+    v_ref,  # [P, D] one page of values
+    valid_ref,  # [P] int8 — per-slot validity (0 = eviction hole)
+    o_ref,  # [G, D]
+    m_scr,  # [G] f32
+    l_scr,  # [G] f32
+    acc_scr,  # [G, D] f32
+    *,
+    sm_scale: float,
+    page_size: int,
+):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    page_ok = (tables_ref[b, ip] >= 0) & (ip * page_size < length)
+
+    @pl.when(page_ok)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * sm_scale
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, P]
+        pos = ip * page_size + jax.lax.iota(jnp.int32, page_size)
+        ok = (pos < length) & (valid_ref[...] > 0)
+        s = jnp.where(ok[None, :], s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p_ = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p_, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p_.astype(v_ref.dtype),
+            v_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ip == np_ - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jax.Array,  # [B, Hq, D]
+    k_pool: jax.Array,  # [N, P, Hkv, D]
+    v_pool: jax.Array,  # [N, P, Hkv, D]
+    block_tables: jax.Array,  # [B, M] int32 (-1 = unallocated)
+    lengths: jax.Array,  # [B] int32
+    slot_valid: jax.Array | None = None,  # [B, M, P] (eviction holes)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    n, p, hkv, _ = k_pool.shape
+    m = block_tables.shape[1]
+    g = hq // hkv
+    sm_scale = d ** -0.5
+    if slot_valid is None:
+        slot_valid = jnp.ones((b, m, p), jnp.int8)
+    slot_valid = slot_valid.astype(jnp.int8)
+
+    # [B, Hkv, G, D] query view; KV pool as [N, Hkv, P, D] for per-head tiles
+    qg = q.reshape(b, hkv, g, d)
+    kp = k_pool.swapaxes(1, 2)  # [N, Hkv, P, D]
+    vp = v_pool.swapaxes(1, 2)
+
+    def table_lookup(b_i, h_i, p_i, tables, lengths):
+        del lengths
+        return (jnp.maximum(tables[b_i, p_i], 0), h_i, 0, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, sm_scale=sm_scale, page_size=p
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, m),
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, g, d),
+                lambda b_i, h_i, p_i, tables, lengths: (b_i, h_i, 0, 0),
+            ),
+            pl.BlockSpec((None, None, p, d), table_lookup),
+            pl.BlockSpec((None, None, p, d), table_lookup),
+            pl.BlockSpec(
+                (None, None, p),
+                lambda b_i, h_i, p_i, tables, lengths: (b_i, p_i, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, g, d),
+            lambda b_i, h_i, p_i, tables, lengths: (b_i, h_i, 0, 0),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, lengths, qg, kp, vp, slot_valid)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,18 @@
+"""Public op: paged_attention (interpret fallback off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import paged_attention as _kernel
+from .ref import paged_attention_ref
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, slot_valid=None):
+    return _kernel(
+        q, k_pool, v_pool, block_tables, lengths, slot_valid,
+        interpret=jax.default_backend() != "tpu",
+    )
+
+
+__all__ = ["paged_attention", "paged_attention_ref"]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Layout (shared with kvcache/):
+    k_pool, v_pool : [n_blocks, page_size, Hkv, D]   the global block pool
+    block_tables   : [B, max_pages] int32            per-sequence page list
+                     (-1 = unallocated)
+    lengths        : [B] int32                       tokens in each sequence
+    q              : [B, Hq, D]                      one new token per seq
+Token t of sequence b lives at pool[block_tables[b, t // page], t % page].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jax.Array,  # [B, Hq, D]
+    k_pool: jax.Array,  # [N, P, Hkv, D]
+    v_pool: jax.Array,  # [N, P, Hkv, D]
+    block_tables: jax.Array,  # [B, M]
+    lengths: jax.Array,  # [B]
+    slot_valid: jax.Array | None = None,  # [B, M, P] eviction holes
+) -> jax.Array:
+    b, hq, d = q.shape
+    n, p, hkv, _ = k_pool.shape
+    m = block_tables.shape[1]
+    g = hq // hkv
+    # gather each sequence's KV: [B, M*P, Hkv, D]
+    tables = jnp.maximum(block_tables, 0)
+    k_seq = k_pool[tables].reshape(b, m * p, hkv, d)
+    v_seq = v_pool[tables].reshape(b, m * p, hkv, d)
+    pos = jnp.arange(m * p)
+    valid = (pos[None, :] < lengths[:, None]) & (
+        jnp.repeat(block_tables >= 0, p, axis=1)
+    )
+    if slot_valid is not None:
+        valid &= slot_valid.reshape(b, m * p).astype(bool)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_seq.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_seq.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,233 @@
+"""Attention: memory-efficient chunked softmax attention (pure XLA) + decode.
+
+Design notes
+------------
+* ``chunked_attention`` is an online-softmax (flash-style) attention written
+  with ``jax.lax.scan`` over KV chunks, each chunk rematerialized in the
+  backward pass (``jax.checkpoint``). It never materializes the [Sq, Skv]
+  score matrix, which is what lets prefill_32k and train_4k fit in HBM
+  without a Pallas dependency in the SPMD dry-run path.
+* The Pallas flash kernel (kernels/flash_attention) implements the same
+  contract for the TPU hot path; ``attention_impl`` selects it. Both are
+  tested against ``reference_attention``.
+* GQA is computed by folding query heads into [kv_heads, group] — the KV
+  tensors are never repeated.
+* Sliding windows and per-layer "global" overrides (Hymba) are expressed as
+  data (masks), not control flow, so a scanned layer stack stays homogeneous.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import logical_constraint
+
+NEG_INF = -1e30
+
+# Attention implementation switch. "auto" routes full-sequence attention
+# through the Pallas flash kernel on TPU (scores stay in VMEM — §Perf cell 1)
+# and through the pure-XLA chunked path elsewhere (CPU tests, the dry-run).
+_ATTN_IMPL = "auto"  # auto | xla | pallas
+
+
+def set_attention_impl(impl: str):
+    global _ATTN_IMPL
+    assert impl in ("auto", "xla", "pallas")
+    _ATTN_IMPL = impl
+
+
+def _use_pallas(window) -> bool:
+    if _ATTN_IMPL == "xla":
+        return False
+    if _ATTN_IMPL == "pallas":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _mask(
+    q_pos: jax.Array,  # [Sq]
+    kv_pos: jax.Array,  # [Skv]
+    window: jax.Array | int,  # 0 = full attention; may be per-example data
+    causal: bool,
+) -> jax.Array:
+    """[Sq, Skv] boolean mask (True = attend)."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    ok = k >= 0  # negative kv positions mark invalid (cold ring-buffer slots)
+    if causal:
+        ok &= k <= q
+    w = jnp.asarray(window)
+    ok &= jnp.where(w > 0, k > q - w, True)
+    return ok
+
+
+def reference_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,
+) -> jax.Array:
+    """Plain einsum attention — the oracle for kernels and chunked impl."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    scores *= d ** -0.5
+    q_pos = jnp.arange(sq) + q_offset
+    kv_pos = jnp.arange(skv)
+    m = _mask(q_pos, kv_pos, window, causal)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "kv_chunk", "window_static")
+)
+def chunked_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, D]
+    window: jax.Array,  # scalar int32 (0 = full); data so layers stay uniform
+    *,
+    causal: bool = True,
+    kv_chunk: int = 1024,
+    window_static: int = -1,  # static window if known (-1: unknown → XLA path)
+    q_offset: int | jax.Array = 0,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV chunks. fp32 accumulators."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    # Pallas routing: window_static >= 0 certifies the traced `window` equals
+    # this static value for every layer using this call site (set by the
+    # model from its config), which the kernel needs at compile time.
+    if window_static >= 0 and sq > 1 and _use_pallas(window_static):
+        from repro.kernels.flash_attention.kernel import (
+            flash_attention as _flash,
+        )
+
+        return _flash(
+            q, k, v,
+            causal=causal,
+            window=window_static,
+            interpret=jax.default_backend() != "tpu",
+        )
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = (skv + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = (q.reshape(b, sq, hkv, g, d) * (d ** -0.5)).astype(q.dtype)
+    ks = k.reshape(b, n_chunks, kv_chunk, hkv, d).swapaxes(0, 1)
+    vs = v.reshape(b, n_chunks, kv_chunk, hkv, d).swapaxes(0, 1)
+    q_pos = jnp.arange(sq) + q_offset
+
+    def chunk_body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kc, vc, c_idx = xs
+        kv_pos = jnp.arange(kv_chunk) + c_idx * kv_chunk
+        valid = kv_pos < skv
+        kv_pos = jnp.where(valid, kv_pos, -1)
+        # K/V are read in their stored dtype (bf16): the MXU accumulates
+        # bf16×bf16 in fp32 internally, so we do NOT request an f32 result —
+        # that would make XLA materialize (and on CPU, carry through the
+        # layer loop) f32 copies of the cache, doubling HBM traffic. Only the
+        # small score tensor is upcast for a stable softmax.
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc).astype(jnp.float32)
+        mask = _mask(q_pos, kv_pos, window, causal)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc)
+        acc = acc * jnp.exp(m_prev - m_new)[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, g, sq), jnp.float32),
+        jnp.zeros((b, hkv, g, sq, d), jnp.float32),
+    )
+    xs = (ks, vs, jnp.arange(n_chunks))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(chunk_body), init, xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, Hq, D] single new-token query
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    kv_pos: jax.Array,  # [B, S] absolute position per cache slot (-1 invalid)
+    pos: jax.Array,  # [B] current absolute position of the query
+    window: jax.Array,  # scalar (0 = full)
+) -> jax.Array:
+    """One decode step against a (possibly ring-buffered) KV cache.
+
+    No chunking needed: score tensor is [B, Hq, S] which is small relative to
+    the cache itself. fp32 softmax.
+    """
+    b, _, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d) * (d ** -0.5)
+    # Cache is read in its stored dtype (bf16); see chunked_attention for why
+    # no f32 result is requested. Softmax runs in f32 on the small scores.
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    ok = kv_pos >= 0
+    ok &= kv_pos <= pos[:, None]
+    w = jnp.asarray(window)
+    ok &= jnp.where(w > 0, kv_pos > (pos[:, None] - w), True)
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter block (QKV + output projection), GQA-aware.
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg) -> dict:
+    from repro.models.common import dense_init, param_dtype
+
+    d, dh = cfg.d_model, cfg.d_head
+    dt = param_dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads, dh), 0, dt),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, dh), 0, dt),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, dh), 0, dt),
+        "wo": dense_init(ks[3], (cfg.n_heads, dh, d), 0, dt).reshape(
+            cfg.n_heads, dh, d
+        ),
+    }
+
+
+def qkv_project(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = logical_constraint(q, "batch", "seq", "heads", "d_head")
+    k = logical_constraint(k, "batch", "seq", "kv_heads", "d_head")
+    v = logical_constraint(v, "batch", "seq", "kv_heads", "d_head")
+    return q, k, v
+
+
+def out_project(params: dict, attn_out: jax.Array, cfg) -> jax.Array:
+    out = jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"])
+    return logical_constraint(out, "batch", "seq", "d_model")

@@ -1,0 +1,184 @@
+"""Shared model building blocks: norms, RoPE, MLPs, embeddings, init.
+
+Functional style: ``*_init(rng, cfg) -> params dict`` and
+``*_apply(params, x, ...) -> array``. Parameters live in plain nested dicts so
+jax.tree_util, checkpointing, and pjit sharding all work untouched.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import logical_constraint
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (maxtext-style 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return std * jax.random.truncated_normal(rng, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.float32):
+    return jax.random.normal(rng, shape, dtype) * 0.02
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dtype)
+
+
+def layernorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, d_head]; positions: [..., seq] (int)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)  # [d_head/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, d/2]
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense): SwiGLU or GELU
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = param_dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wi_gate": dense_init(ks[0], (d, d_ff), 0, dt),
+            "wi_up": dense_init(ks[1], (d, d_ff), 0, dt),
+            "wo": dense_init(ks[2], (d_ff, d), 0, dt),
+        }
+    return {
+        "wi": dense_init(ks[0], (d, d_ff), 0, dt),
+        "wo": dense_init(ks[1], (d_ff, d), 0, dt),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: [batch, seq, d_model] -> same."""
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    else:
+        h = jax.nn.gelu(x @ params["wi"], approximate=True)
+    h = logical_constraint(h, "batch", "seq", "d_ff")
+    out = h @ params["wo"]
+    return logical_constraint(out, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with chunked cross-entropy (never materializes the
+# full [B, S, vocab] logits — required at vocab 100k × seq 4k scales).
+# ---------------------------------------------------------------------------
+
+def embedding_init(rng, cfg: ModelConfig) -> dict:
+    dt = param_dtype(cfg)
+    k1, k2 = jax.random.split(rng)
+    params = {"embed": embed_init(k1, (cfg.vocab, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab), 0, dt)
+    return params
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return logical_constraint(x, "batch", "seq", "d_model")
+
+
+def unembed_matrix(params: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def logits_last(params: dict, x_last: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Decode-path logits for the final position only. x_last: [B, d]."""
+    w = unembed_matrix(params, cfg)
+    logits = (x_last.astype(jnp.float32)) @ w.astype(jnp.float32)
+    return logical_constraint(logits, "batch", "vocab")
+
+
+def chunked_xent_loss(
+    params: dict,
+    x: jax.Array,
+    labels: jax.Array,
+    cfg: ModelConfig,
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean next-token cross-entropy, computed seq-chunk-wise.
+
+    x: [B, S, d] final hidden states; labels: [B, S] int32 targets.
+    """
+    w = unembed_matrix(params, cfg)
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    pad = n_chunks * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)  # [n, B, c, d]
+    ls = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xl):
+        xc, lc = xl
+        logits = xc.astype(jnp.float32) @ w.astype(jnp.float32)  # [B, c, V]
+        logits = logical_constraint(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lc >= 0
+        loss = jnp.where(valid, lse - picked, 0.0)
+        return (carry[0] + loss.sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (xs, ls))
+    return tot / jnp.maximum(cnt, 1)

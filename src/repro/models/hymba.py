@@ -1,0 +1,203 @@
+"""Hymba-1.5B: hybrid-head LM — every layer runs attention heads and Mamba
+(SSM) heads *in parallel* on the same input, outputs fused (arXiv:2411.13676).
+
+Faithful points: parallel attn ∥ SSM within a layer; mostly sliding-window
+attention with a few global layers (first / middle / last); per-path output
+normalization before fusion. Stubbed: meta tokens (noted in DESIGN.md).
+
+All layers are structurally identical → single scanned stack; global-vs-SWA
+is per-layer *data* (window schedule).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models import ssm
+from repro.models.attention import (
+    attn_init,
+    chunked_attention,
+    decode_attention,
+    out_project,
+    qkv_project,
+)
+from repro.models.transformer import cache_alloc_len, window_schedule
+from repro.sharding.rules import logical_constraint
+
+
+def _block_init(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return {
+        "ln1": C.rmsnorm_init(d),
+        "attn": attn_init(ks[0], cfg),
+        "mamba": ssm.mamba_init(ks[1], d, d, cfg.ssm_state, cfg.conv_kernel, C.param_dtype(cfg)),
+        "attn_norm": C.rmsnorm_init(d),
+        "mamba_norm": C.rmsnorm_init(d),
+        "ln2": C.rmsnorm_init(d),
+        "mlp": C.mlp_init(ks[2], cfg),
+    }
+
+
+def _fuse(params, attn_out, mamba_out, cfg):
+    a = C.rmsnorm_apply(params["attn_norm"], attn_out, cfg.norm_eps)
+    m = C.rmsnorm_apply(params["mamba_norm"], mamba_out, cfg.norm_eps)
+    return 0.5 * (a + m)
+
+
+def _block_forward(params, x, positions, window, cfg: ModelConfig):
+    h = C.rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+    # attention path
+    q, k, v = qkv_project(params["attn"], h, cfg)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k_r = C.apply_rope(k, positions, cfg.rope_theta)
+    attn = chunked_attention(q, k_r, v, window, causal=True)
+    attn = out_project(params["attn"], attn, cfg)
+    # ssm path (parallel, same input)
+    mam = ssm.mamba_apply(params["mamba"], h)
+    x = x + _fuse(params, attn, mam, cfg)
+    h2 = C.rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+    x = x + C.mlp_apply(params["mlp"], h2, cfg)
+    x = logical_constraint(x, "batch", "seq", "d_model")
+    return x, (k_r, v)
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _block_init(k, cfg))(layer_keys)
+    return {
+        "embedding": C.embedding_init(k_emb, cfg),
+        "layers": layers,
+        "final_norm": C.rmsnorm_init(cfg.d_model),
+    }
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, *, collect_kv=False, remat=True):
+    x = C.embed_tokens(params["embedding"], tokens, cfg)
+    positions = jnp.arange(x.shape[1])
+    windows = window_schedule(cfg)
+
+    def body(x, xs):
+        lp, win = xs
+        x, kv = _block_forward(lp, x, positions, win, cfg)
+        return x, kv if collect_kv else None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, kvs = jax.lax.scan(body_fn, x, (params["layers"], windows))
+    x = C.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return (x, kvs) if collect_kv else x
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = forward_hidden(params, batch["tokens"], cfg)
+    return C.chunked_xent_loss(params["embedding"], x, batch["labels"], cfg)
+
+
+# -- serving: KV cache (attention) + recurrent state (mamba) ---------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    s_alloc = cache_alloc_len(cfg, seq_len)
+    dt = C.param_dtype(cfg)
+    l = cfg.n_layers
+    d = cfg.d_model
+    return {
+        "k": jnp.zeros((l, batch, s_alloc, cfg.n_kv_heads, cfg.d_head), dt),
+        "v": jnp.zeros((l, batch, s_alloc, cfg.n_kv_heads, cfg.d_head), dt),
+        "kv_pos": jnp.full((batch, s_alloc), -1, jnp.int32),
+        "ssm_h": jnp.zeros((l, batch, d, cfg.ssm_state), jnp.float32),
+        "ssm_conv": jnp.zeros((l, batch, cfg.conv_kernel - 1, d), jnp.float32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, max_len: int | None = None):
+    # Full-sequence pass that also extracts KV + final SSM state per layer.
+    x = C.embed_tokens(params["embedding"], tokens, cfg)
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    windows = window_schedule(cfg)
+
+    def body(x, xs):
+        lp, win = xs
+        h = C.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(lp["attn"], h, cfg)
+        q = C.apply_rope(q, positions, cfg.rope_theta)
+        k_r = C.apply_rope(k, positions, cfg.rope_theta)
+        attn = chunked_attention(q, k_r, v, win, causal=True)
+        attn = out_project(lp["attn"], attn, cfg)
+        u, z, dtg, bmat, cmat, u_raw = ssm._mamba_gates(lp["mamba"], h)
+        h0 = jnp.zeros((b, cfg.d_model, cfg.ssm_state), jnp.float32)
+        y, h_last = ssm._mamba_scan_chunked(
+            u, dtg, bmat, cmat, lp["mamba"]["a_log"], h0, 64
+        )
+        y = (y + u * lp["mamba"]["d_skip"]) * jax.nn.silu(z.astype(jnp.float32))
+        mam = y.astype(x.dtype) @ lp["mamba"]["out_proj"]
+        x = x + _fuse(lp, attn, mam, cfg)
+        h2 = C.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps)
+        x = x + C.mlp_apply(lp["mlp"], h2, cfg)
+        # decode conv history = PRE-conv raw projected inputs
+        conv_state = u_raw[:, -(cfg.conv_kernel - 1):].astype(jnp.float32)
+        return x, (k_r, v, h_last, conv_state)
+
+    x, (ks, vs, hs, convs) = jax.lax.scan(
+        jax.checkpoint(body), x, (params["layers"], windows)
+    )
+    x = C.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    s_alloc = cache_alloc_len(cfg, max_len or s)
+    if s_alloc > s:  # decode headroom
+        pad = s_alloc - s
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.concatenate([jnp.arange(s), jnp.full((pad,), -1, jnp.int32)])
+        kv_pos = jnp.broadcast_to(kv_pos, (b, s_alloc))
+    else:
+        kv_pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache = {
+        "k": ks, "v": vs, "kv_pos": kv_pos,
+        "ssm_h": hs, "ssm_conv": convs,
+    }
+    logits = C.logits_last(params["embedding"], x[:, -1], cfg)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = C.embed_tokens(params["embedding"], tokens[:, None], cfg)
+    b = tokens.shape[0]
+    s_alloc = cache["k"].shape[2]
+    slot = pos % s_alloc
+    kv_pos = cache["kv_pos"].at[jnp.arange(b), slot].set(pos)
+    windows = window_schedule(cfg)
+
+    def body(x, xs):
+        lp, kc, vc, hc, cc, win = xs
+        h = C.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(lp["attn"], h, cfg)
+        pos2d = pos[:, None]
+        q = C.apply_rope(q, pos2d, cfg.rope_theta)
+        k = C.apply_rope(k, pos2d, cfg.rope_theta)
+        bidx = jnp.arange(b)
+        kc = kc.at[bidx, slot].set(k[:, 0])
+        vc = vc.at[bidx, slot].set(v[:, 0])
+        attn = decode_attention(q, kc, vc, kv_pos, pos, win)
+        attn = out_project(lp["attn"], attn, cfg)
+        mam, new_ssm = ssm.mamba_decode_step(
+            lp["mamba"], {"h": hc, "conv": cc}, h[:, 0]
+        )
+        x = x + _fuse(lp, attn, mam[:, None], cfg)
+        h2 = C.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps)
+        x = x + C.mlp_apply(lp["mlp"], h2, cfg)
+        return x, (kc, vc, new_ssm["h"], new_ssm["conv"])
+
+    x, (ks, vs, hs, convs) = jax.lax.scan(
+        body,
+        x,
+        (params["layers"], cache["k"], cache["v"], cache["ssm_h"], cache["ssm_conv"], windows),
+    )
+    x = C.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = C.logits_last(params["embedding"], x[:, 0], cfg)
+    return logits, {
+        "k": ks, "v": vs, "kv_pos": kv_pos, "ssm_h": hs, "ssm_conv": convs
+    }

@@ -1,0 +1,206 @@
+"""Arch registry: ``--arch <id>`` → config + a uniform model API.
+
+The API surface consumed by the launcher / dry-run / trainer / server:
+
+    api = get_model(cfg)
+    params = api.init_params(rng)
+    loss   = api.loss_fn(params, batch)            # batch from api.train_batch_specs
+    logits, cache = api.prefill(params, **inputs)  # inputs from api.prefill_specs
+    logits, cache = api.decode_step(params, cache, tokens, pos)
+    cache  = api.init_cache(batch, seq_len)
+
+``input_specs(shape)`` returns jax.ShapeDtypeStruct stand-ins (weak-type
+correct, no allocation) for every model input of the given shape cell — the
+dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+ARCH_MODULES = {
+    "granite-20b": "granite_20b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "deepseek-7b": "deepseek_7b",
+    "xlstm-125m": "xlstm_125m",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "hymba-1.5b": "hymba_1_5b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+ALL_ARCHS = tuple(ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    reductions: dict[str, Any] = dict(
+        n_layers=4 if (cfg.slstm_every or cfg.global_attn_layers) else 2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=1 if cfg.n_kv_heads == 1 else (4 if cfg.n_kv_heads == cfg.n_heads else 2),
+        d_ff=64 if cfg.n_experts else 256,
+        vocab=512,
+        max_position=4096,
+        dtype="float32",
+    )
+    if cfg.n_experts:
+        # capacity_factor high enough that the tiny smoke batches never drop
+        # tokens — keeps prefill/decode numerics comparable in tests.
+        reductions.update(n_experts=8, top_k=min(cfg.top_k, 2), capacity_factor=8.0)
+    if cfg.sliding_window:
+        reductions.update(sliding_window=16)
+    if cfg.global_attn_layers:
+        reductions.update(global_attn_layers=(0, 3))
+    if cfg.n_encoder_layers:
+        reductions.update(n_encoder_layers=2)
+    return dataclasses.replace(cfg, **reductions)
+
+
+# ---------------------------------------------------------------------------
+
+def _seq_split(cfg: ModelConfig, seq_len: int) -> tuple[int, int]:
+    """(frontend_tokens, text_tokens) for stub-frontend archs."""
+    if cfg.frontend == "vision_patches":
+        s_img = int(seq_len * cfg.frontend_tokens_ratio)
+        return s_img, seq_len - s_img
+    if cfg.frontend == "audio_frames":
+        return max(1, seq_len // cfg.encoder_seq_ratio), seq_len
+    return 0, seq_len
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable          # (params, batch) -> scalar
+    prefill: Callable          # (params, **inputs) -> (logits, cache)
+    decode_step: Callable      # (params, cache, tokens, pos) -> (logits, cache)
+    init_cache: Callable       # (batch, seq_len) -> cache pytree
+
+    # -- input specs (ShapeDtypeStruct, no allocation) ---------------------
+    def train_batch_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        s_front, s_text = _seq_split(cfg, s)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(
+                (b, s if cfg.frontend == "audio_frames" else s_text), jnp.int32
+            ),
+        }
+        if cfg.frontend != "none":
+            specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (b, s_front, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.frontend == "vision_patches":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        return specs
+
+    def prefill_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        s_front, s_text = _seq_split(cfg, s)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+        if cfg.frontend == "vision_patches":
+            specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (b, s_front, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.frontend == "audio_frames":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, s_front, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return specs
+
+    def decode_specs(self, shape: ShapeConfig) -> dict:
+        b = shape.global_batch
+        cache = jax.eval_shape(lambda: self.init_cache(b, shape.seq_len))
+        return {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+
+    def make_train_batch(self, shape: ShapeConfig, rng) -> dict:
+        """Materialize a random batch matching train_batch_specs (tests)."""
+        specs = self.train_batch_specs(shape)
+        keys = jax.random.split(rng, len(specs))
+        out = {}
+        for k_, (name, spec) in zip(keys, sorted(specs.items())):
+            if spec.dtype == jnp.int32:
+                out[name] = jax.random.randint(k_, spec.shape, 0, self.cfg.vocab)
+            else:
+                out[name] = jax.random.normal(k_, spec.shape, spec.dtype) * 0.02
+        return out
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer as M
+
+        def prefill(params, tokens, extra_embeds=None, max_len=None):
+            return M.prefill(
+                params, tokens, cfg, extra_embeds=extra_embeds, max_len=max_len
+            )
+
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda rng: M.init_params(rng, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            prefill=prefill,
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, s: M.init_cache(cfg, b, s),
+        )
+    if fam == "ssm":
+        from repro.models import xlstm as M
+
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda rng: M.init_params(rng, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            prefill=lambda params, tokens, max_len=None: M.prefill(params, tokens, cfg),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, s: M.init_cache(cfg, b, s),
+        )
+    if fam == "hybrid":
+        from repro.models import hymba as M
+
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda rng: M.init_params(rng, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            prefill=lambda params, tokens, max_len=None: M.prefill(
+                params, tokens, cfg, max_len=max_len
+            ),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, s: M.init_cache(cfg, b, s),
+        )
+    if fam == "audio":
+        from repro.models import whisper as M
+
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda rng: M.init_params(rng, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            prefill=lambda params, tokens, frames, max_len=None: M.prefill(
+                params, tokens, frames, cfg, max_len=max_len
+            ),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, s: M.init_cache(cfg, b, s),
+        )
+    raise ValueError(f"unknown family {fam}")

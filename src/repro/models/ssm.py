@@ -1,0 +1,388 @@
+"""Recurrent sequence mixers: Mamba (selective SSM), mLSTM, sLSTM.
+
+Each mixer ships two forms:
+  * a *sequential* reference (``lax.scan`` over time) — the correctness oracle;
+  * a *chunkwise-parallel* form (associative scan / intra-chunk attention with
+    log-space gate stabilization) — the TPU-native implementation used by the
+    models. Chunk boundaries carry the recurrent state, so memory is
+    O(S/chunk · state) instead of O(S · state).
+
+All recurrences run in fp32 regardless of model dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+F32 = jnp.float32
+
+
+# ===========================================================================
+# Mamba (selective SSM) — used by Hymba's SSM heads.  State: h [B, D, N].
+# ===========================================================================
+
+def mamba_init(rng, d_model: int, d_inner: int, n_state: int, conv_k: int, dtype) -> dict:
+    ks = jax.random.split(rng, 7)
+    dt_rank = max(1, d_model // 16)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), 0, dtype),
+        "conv_w": dense_init(ks[1], (conv_k, d_inner), 0, F32) * 0.5,
+        "x_dt": dense_init(ks[2], (d_inner, dt_rank), 0, dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), 0, F32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, d_inner))).astype(F32),
+        "x_bc": dense_init(ks[4], (d_inner, 2 * n_state), 0, dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n_state + 1, dtype=F32), (d_inner, 1))),
+        "d_skip": jnp.ones((d_inner,), F32),
+        "out_proj": dense_init(ks[5], (d_inner, d_model), 0, dtype),
+    }
+
+
+def _mamba_gates(params, x):
+    """x: [B, S, d_model] -> (u [B,S,D] conv'd+silu input, z gate, dt, Bmat,
+    Cmat, u_raw pre-conv input — the decode conv history)."""
+    xz = x @ params["in_proj"]
+    u_raw, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv over time
+    k = params["conv_w"].shape[0]
+    u32 = u_raw.astype(F32)
+    pad = jnp.pad(u32, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(pad[:, i : i + u_raw.shape[1]] * params["conv_w"][i] for i in range(k))
+    u = jax.nn.silu(conv)
+    dt = jax.nn.softplus(
+        (u @ params["x_dt"].astype(F32)) @ params["dt_proj"] + params["dt_bias"]
+    )  # [B,S,D]
+    bc = u @ params["x_bc"].astype(F32)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)  # [B,S,N] each
+    return u, z, dt, bmat, cmat, u_raw
+
+
+def _mamba_scan_chunked(u, dt, bmat, cmat, a_log, h0, chunk: int):
+    """Diagonal SSM scan: h_t = exp(dt_t·A)·h_{t-1} + dt_t·B_t·u_t,
+    y_t = C_t·h_t. Chunked: outer scan carries h, inner associative scan."""
+    b, s, d = u.shape
+    n = bmat.shape[-1]
+    a = -jnp.exp(a_log)  # [D, N], negative for stability
+    n_chunks = max(1, s // chunk)
+    chunk = s // n_chunks if s % n_chunks == 0 else chunk
+    if s % chunk:
+        pad = chunk - s % chunk
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s_pad = u.shape[1]
+    nc = s_pad // chunk
+
+    def reshape(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    uc, dtc, bc, cc = map(reshape, (u, dt, bmat, cmat))
+
+    def chunk_body(h, xs):
+        u_, dt_, b_, c_ = xs  # [B, c, ...]
+        decay = jnp.exp(dt_[..., None] * a)  # [B,c,D,N]
+        inp = (dt_ * u_)[..., None] * b_[:, :, None, :]  # [B,c,D,N]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        acc_a, acc_b = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+        h_all = acc_a * h[:, None] + acc_b  # [B,c,D,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c_)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, (uc, dtc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, d)[:, :s]
+    return y, h_last
+
+
+def mamba_apply(params, x, *, chunk: int = 64):
+    """x: [B, S, d_model] -> [B, S, d_model]; fresh state."""
+    u, z, dt, bmat, cmat, _ = _mamba_gates(params, x)
+    b = x.shape[0]
+    d, n = params["a_log"].shape
+    h0 = jnp.zeros((b, d, n), F32)
+    y, _ = _mamba_scan_chunked(u, dt, bmat, cmat, params["a_log"], h0, chunk)
+    y = y + u * params["d_skip"]
+    y = y * jax.nn.silu(z.astype(F32))
+    return (y.astype(x.dtype)) @ params["out_proj"]
+
+
+def mamba_init_state(params, batch: int) -> dict:
+    d, n = params["a_log"].shape
+    k = params["conv_w"].shape[0]
+    return {
+        "h": jnp.zeros((batch, d, n), F32),
+        "conv": jnp.zeros((batch, k - 1, d), F32),
+    }
+
+
+def mamba_decode_step(params, state, x_t):
+    """x_t: [B, d_model] one token. Returns (y [B, d_model], new state)."""
+    xz = x_t @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    k = params["conv_w"].shape[0]
+    hist = jnp.concatenate([state["conv"], u.astype(F32)[:, None]], axis=1)  # [B,k,D]
+    conv = jnp.einsum("bkd,kd->bd", hist, params["conv_w"])
+    u_ = jax.nn.silu(conv)
+    dt = jax.nn.softplus(
+        (u_ @ params["x_dt"].astype(F32)) @ params["dt_proj"] + params["dt_bias"]
+    )
+    bc = u_ @ params["x_bc"].astype(F32)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt[..., None] * a)  # [B,D,N]
+    h = decay * state["h"] + (dt * u_)[..., None] * bmat[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat) + u_ * params["d_skip"]
+    y = y * jax.nn.silu(z.astype(F32))
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return (y.astype(x_t.dtype)) @ params["out_proj"], new_state
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell). State: C [B,H,Dh,Dh], n [B,H,Dh], m [B,H].
+# ===========================================================================
+
+def mlstm_init(rng, d_model: int, n_heads: int, d_head: int, dtype) -> dict:
+    ks = jax.random.split(rng, 6)
+    dh = n_heads * d_head
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads, d_head), 0, dtype),
+        "wk": dense_init(ks[1], (d_model, n_heads, d_head), 0, dtype),
+        "wv": dense_init(ks[2], (d_model, n_heads, d_head), 0, dtype),
+        "w_i": dense_init(ks[3], (d_model, n_heads), 0, F32) * 0.1,
+        "w_f": dense_init(ks[4], (d_model, n_heads), 0, F32) * 0.1,
+        "f_bias": jnp.full((n_heads,), 3.0, F32),  # start remembering
+        "w_o": dense_init(ks[5], (d_model, dh), 0, dtype),
+    }
+
+
+def _mlstm_qkvif(params, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]).astype(F32)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"]).astype(F32)
+    k = k * (k.shape[-1] ** -0.5)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"]).astype(F32)
+    i_raw = (x.astype(F32) @ params["w_i"])  # [B,S,H]
+    f_raw = (x.astype(F32) @ params["w_f"]) + params["f_bias"]
+    log_f = jax.nn.log_sigmoid(f_raw)  # sigmoid forget gate, log-space
+    return q, k, v, i_raw, log_f
+
+
+def mlstm_sequential(params, x):
+    """Reference: exact recurrence, scan over time. [B,S,d]->[B,S,H*Dh]."""
+    q, k, v, i_raw, log_f = _mlstm_qkvif(params, x)
+    b, s, h, dh = q.shape
+    c0 = jnp.zeros((b, h, dh, dh), F32)
+    n0 = jnp.zeros((b, h, dh), F32)
+    m0 = jnp.full((b, h), -1e30, F32)
+
+    def step(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, it, lft = xs  # [b,h,dh] / [b,h]
+        m_new = jnp.maximum(lft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lft + m - m_new)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", c, qt)
+        den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt))
+        y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), y
+
+    sw = lambda t: t.swapaxes(0, 1)
+    (_, _, _), ys = jax.lax.scan(
+        step, (c0, n0, m0), (sw(q), sw(k), sw(v), sw(i_raw), sw(log_f))
+    )
+    return ys.swapaxes(0, 1).reshape(b, s, h * dh)
+
+
+def _mlstm_chunk(carry, xs):
+    """One chunk of the chunkwise-parallel mLSTM. carry: (C, n, m)."""
+    c_in, n_in, m_in = carry
+    q, k, v, i_raw, log_f = xs  # [B,c,H,*] / [B,c,H]
+    b, c_len, h, dh = q.shape
+    # Cumulative log forget within chunk (inclusive).
+    f_cum = jnp.cumsum(log_f, axis=1)  # [B,c,H]
+    # Stabilizer: m_t = max(m_in + F_t, cummax_s≤t (i_s + F_t - F_s))
+    #           = F_t + max(m_in, cummax(i_s - F_s))
+    i_shift = i_raw - f_cum  # i_s - F_s
+    run_max = jax.lax.associative_scan(jnp.maximum, i_shift, axis=1)
+    m_t = f_cum + jnp.maximum(m_in[:, None], run_max)  # [B,c,H]
+    # Intra-chunk "attention" weights: w_ts = exp(i_s + F_t - F_s - m_t), s<=t
+    logw = (
+        i_shift[:, None, :, :]  # s axis -> dim2
+        + f_cum[:, :, None, :]  # t axis -> dim1
+        - m_t[:, :, None, :]
+    )  # [B, t, s, H]
+    causal = jnp.tril(jnp.ones((c_len, c_len), bool))
+    w = jnp.where(causal[None, :, :, None], jnp.exp(logw), 0.0)
+    scores = jnp.einsum("bthk,bshk->btsh", q, k)
+    inter = jnp.einsum("btsh,btsh,bshk->bthk", scores, w, v)
+    n_inter = jnp.einsum("btsh,bshk->bthk", w, k)
+    # Contribution of the carried state: exp(m_in + F_t - m_t) * (C_in·q)
+    # C[i,j] = v_i k_j → y_i = Σ_j C[i,j] q_j: contract C's SECOND index.
+    decay0 = jnp.exp(m_in[:, None] + f_cum - m_t)  # [B,c,H]
+    qc = jnp.einsum("bthk,bhjk->bthj", q, c_in)  # (C_in·q)_j
+    num = inter + decay0[..., None] * qc
+    nq = jnp.einsum("bthk,bhk->bth", q, n_in)
+    den = jnp.abs(jnp.einsum("bthk,bthk->bth", n_inter, q) + decay0 * nq)
+    y = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+    # ---- carry update to the end of chunk ----
+    m_end = m_t[:, -1]  # [B,H]
+    f_total = f_cum[:, -1]
+    wc = jnp.exp(i_shift + f_total[:, None] - m_end[:, None])  # [B,c,H]
+    c_new = jnp.exp(m_in + f_total - m_end)[..., None, None] * c_in + jnp.einsum(
+        "bsh,bshi,bshj->bhij", wc, v, k
+    )
+    n_new = jnp.exp(m_in + f_total - m_end)[..., None] * n_in + jnp.einsum(
+        "bsh,bshk->bhk", wc, k
+    )
+    return (c_new, n_new, m_end), y
+
+
+def mlstm_chunked(params, x, *, chunk: int = 128, state=None):
+    """Chunkwise-parallel mLSTM. [B,S,d] -> ([B,S,H*Dh], final_state)."""
+    q, k, v, i_raw, log_f = _mlstm_qkvif(params, x)
+    b, s, h, dh = q.shape
+    if state is None:
+        state = mlstm_init_state_raw(b, h, dh)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        ext = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v, i_raw = map(ext, (q, k, v, i_raw))
+        log_f = ext(log_f)
+    nc = q.shape[1] // chunk
+
+    def reshape(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(reshape, (q, k, v, i_raw, log_f)))
+    state, ys = jax.lax.scan(jax.checkpoint(_mlstm_chunk), state, xs)
+    y = ys.swapaxes(0, 1).reshape(b, -1, h * dh)[:, :s]
+    return y, state
+
+
+def mlstm_init_state_raw(b, h, dh):
+    return (
+        jnp.zeros((b, h, dh, dh), F32),
+        jnp.zeros((b, h, dh), F32),
+        jnp.full((b, h), -1e30, F32),
+    )
+
+
+def mlstm_apply(params, x, *, chunk: int = 128):
+    """[B,S,d_model] -> [B,S,H*Dh] (output projection applied by the block)."""
+    y, _ = mlstm_chunked(params, x, chunk=chunk)
+    return y.astype(x.dtype)
+
+
+def mlstm_decode_step(params, state, x_t):
+    """x_t: [B, d_model]. Returns (y [B, H*Dh], new_state)."""
+    q, k, v, i_raw, log_f = _mlstm_qkvif(params, x_t[:, None])
+    c, n, m = state
+    qt, kt, vt = q[:, 0], k[:, 0], v[:, 0]
+    it, lft = i_raw[:, 0], log_f[:, 0]
+    m_new = jnp.maximum(lft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(lft + m - m_new)
+    c = f_p[..., None, None] * c + i_p[..., None, None] * (
+        vt[..., :, None] * kt[..., None, :]
+    )
+    n = f_p[..., None] * n + i_p[..., None] * kt
+    num = jnp.einsum("bhij,bhj->bhi", c, qt)
+    den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    b, h, dh = y.shape
+    return y.reshape(b, h * dh).astype(x_t.dtype), (c, n, m_new)
+
+
+# ===========================================================================
+# sLSTM (scalar cell with exponential gating + per-head recurrence).
+# State: (h, c, n, m) each [B, H, Dh].
+# ===========================================================================
+
+def slstm_init(rng, d_model: int, n_heads: int, d_head: int, dtype) -> dict:
+    ks = jax.random.split(rng, 9)
+    dh_total = n_heads * d_head
+
+    def w(key):
+        return dense_init(key, (d_model, n_heads, d_head), 0, F32)
+
+    def r(key):
+        return dense_init(key, (n_heads, d_head, d_head), 1, F32)
+
+    return {
+        "wz": w(ks[0]), "wi": w(ks[1]), "wf": w(ks[2]), "wo": w(ks[3]),
+        "rz": r(ks[4]), "ri": r(ks[5]), "rf": r(ks[6]), "ro": r(ks[7]),
+        "f_bias": jnp.full((n_heads, d_head), 3.0, F32),
+        "out_proj": dense_init(ks[8], (dh_total, d_model), 0, dtype),
+    }
+
+
+def slstm_init_state(batch: int, n_heads: int, d_head: int):
+    z = jnp.zeros((batch, n_heads, d_head), F32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z - 1e30}
+
+
+def _slstm_step(params, state, x_t):
+    """x_t: [B, H, Dh]-projected inputs dict. One recurrence step."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+
+    def rec(wname, rname):
+        return x_t[wname] + jnp.einsum("bhk,hkj->bhj", h, params[rname])
+
+    z = jnp.tanh(rec("z", "rz"))
+    i_raw = rec("i", "ri")
+    f_raw = rec("f", "rf") + params["f_bias"]
+    o = jax.nn.sigmoid(rec("o", "ro"))
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_p = jnp.exp(i_raw - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_apply(params, x, *, state=None):
+    """x: [B,S,d_model] -> ([B,S,d_model], final_state). Sequential over S —
+    sLSTM's memory mixing is inherently serial (xLSTM §2.1); it appears only
+    in a minority of xLSTM layers by design."""
+    b, s, _ = x.shape
+    h_, dh = params["f_bias"].shape
+    if state is None:
+        state = slstm_init_state(b, h_, dh)
+    proj = {
+        name: jnp.einsum("bsd,dhk->bshk", x.astype(F32), params["w" + name])
+        for name in ("z", "i", "f", "o")
+    }
+
+    def step(st, xs):
+        st = _slstm_step(params, st, xs)
+        return st, st["h"]
+
+    xs = {k_: v.swapaxes(0, 1) for k_, v in proj.items()}
+    state, hs = jax.lax.scan(step, state, xs)
+    y = hs.swapaxes(0, 1).reshape(b, s, h_ * dh)
+    return (y.astype(x.dtype)) @ params["out_proj"], state
+
+
+def slstm_decode_step(params, state, x_t):
+    """x_t: [B, d_model]. Returns (y [B, d_model], new state)."""
+    proj = {
+        name: jnp.einsum("bd,dhk->bhk", x_t.astype(F32), params["w" + name])
+        for name in ("z", "i", "f", "o")
+    }
+    state = _slstm_step(params, state, proj)
+    b = x_t.shape[0]
+    y = state["h"].reshape(b, -1)
+    return (y.astype(x_t.dtype)) @ params["out_proj"], state

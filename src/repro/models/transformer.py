@@ -1,0 +1,304 @@
+"""Decoder-only transformer LM (dense + MoE): granite-20b, internlm2-1.8b,
+deepseek-coder-33b, deepseek-7b, llava-next-34b (backbone), olmoe-1b-7b,
+mixtral-8x22b.
+
+Layers are stacked and driven by ``jax.lax.scan`` (small HLO, fast compile on
+the 512-device dry-run) with per-layer remat. Heterogeneity (sliding-window
+vs global layers) is expressed as per-layer *data* (window sizes), never
+Python control flow, so the stack stays scannable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models.attention import (
+    attn_init,
+    chunked_attention,
+    decode_attention,
+    out_project,
+    qkv_project,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.sharding.rules import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Per-layer window schedule (0 = full attention)
+# ---------------------------------------------------------------------------
+
+def window_schedule(cfg: ModelConfig) -> jnp.ndarray:
+    win = jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    if cfg.global_attn_layers:
+        idx = jnp.asarray(cfg.global_attn_layers)
+        win = win.at[idx].set(0)
+    return win
+
+
+def cache_alloc_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring-buffer allocation: SWA-everywhere archs cap the cache at the
+    window size (mixtral long-context); any full-attention layer forces a
+    full-length cache."""
+    if cfg.sliding_window > 0 and not cfg.global_attn_layers:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig):
+    return C.rmsnorm_init(cfg.d_model)
+
+
+def _norm(params, x, cfg):
+    return C.rmsnorm_apply(params, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def block_init(rng, cfg: ModelConfig) -> dict:
+    k_attn, k_ffn = jax.random.split(rng)
+    params = {
+        "ln1": _norm_init(cfg),
+        "attn": attn_init(k_attn, cfg),
+        "ln2": _norm_init(cfg),
+    }
+    if cfg.n_experts:
+        params["moe"] = moe_init(k_ffn, cfg)
+    else:
+        params["mlp"] = C.mlp_init(k_ffn, cfg)
+    return params
+
+
+def _ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.n_experts:
+        return moe_apply(params["moe"], x, cfg)
+    return C.mlp_apply(params["mlp"], x, cfg)
+
+
+def block_forward(
+    params: dict,
+    x: jax.Array,  # [B, S, d]
+    positions: jax.Array,  # [S]
+    window: jax.Array,  # scalar int32
+    cfg: ModelConfig,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence (train / prefill) block. Returns (x, (k, v)) so prefill
+    can build the KV cache."""
+    h = _norm(params["ln1"], x, cfg)
+    q, k, v = qkv_project(params["attn"], h, cfg)
+    if cfg.use_rope:
+        q = C.apply_rope(q, positions, cfg.rope_theta)
+        k = C.apply_rope(k, positions, cfg.rope_theta)
+    # uniform-window archs can certify the static window → Pallas-routable
+    ws = cfg.sliding_window if not cfg.global_attn_layers else -1
+    attn = chunked_attention(q, k, v, window, causal=True, window_static=ws)
+    x = x + out_project(params["attn"], attn, cfg)
+    h2 = _norm(params["ln2"], x, cfg)
+    x = x + _ffn(params, h2, cfg)
+    x = logical_constraint(x, "batch", "seq", "d_model")
+    return x, (k, v)
+
+
+def block_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, d]
+    k_cache: jax.Array,  # [B, S_alloc, Hkv, D]
+    v_cache: jax.Array,
+    kv_pos: jax.Array,  # [B, S_alloc]
+    pos: jax.Array,  # [B]
+    slot: jax.Array,  # [B] ring slot to write
+    window: jax.Array,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode block. Returns (x, k_new, v_new) where k_new/v_new
+    are the updated caches for this layer."""
+    b = x.shape[0]
+    h = _norm(params["ln1"], x, cfg)
+    q, k, v = qkv_project(params["attn"], h, cfg)
+    if cfg.use_rope:
+        pos2d = pos[:, None]  # [B, 1]
+        q = C.apply_rope(q, pos2d, cfg.rope_theta)
+        k = C.apply_rope(k, pos2d, cfg.rope_theta)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+    attn = decode_attention(q, k_cache, v_cache, kv_pos, pos, window)
+    x = x + out_project(params["attn"], attn, cfg)
+    h2 = _norm(params["ln2"], x, cfg)
+    x = x + _ffn(params, h2, cfg)
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# LM: init / forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_layers, k_pos = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+    params = {
+        "embedding": C.embedding_init(k_emb, cfg),
+        "layers": layers,
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.use_rope:
+        params["pos_embed"] = C.embed_init(
+            k_pos, (cfg.max_position, cfg.d_model), C.param_dtype(cfg)
+        )
+    return params
+
+
+def _input_embeds(params, tokens, cfg, extra_embeds=None, position_offset=0):
+    x = C.embed_tokens(params["embedding"], tokens, cfg)
+    if extra_embeds is not None:
+        # VLM stub: precomputed patch embeddings are prepended to the text.
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s) + position_offset
+    if not cfg.use_rope:
+        x = x + jnp.take(params["pos_embed"], positions, axis=0)[None]
+    return x, positions
+
+
+def forward_hidden(
+    params: dict,
+    tokens: jax.Array,  # [B, S_text]
+    cfg: ModelConfig,
+    *,
+    extra_embeds: jax.Array | None = None,
+    collect_kv: bool = False,
+    remat: bool = True,
+):
+    """Returns final hidden states [B, S, d] (+ stacked per-layer KV)."""
+    x, positions = _input_embeds(params, tokens, cfg, extra_embeds)
+    windows = window_schedule(cfg)
+
+    def body(x, xs):
+        lp, win = xs
+        x, kv = block_forward(lp, x, positions, win, cfg)
+        return x, kv if collect_kv else None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, kvs = jax.lax.scan(body_fn, x, (params["layers"], windows))
+    x = _norm(params["final_norm"], x, cfg)
+    return (x, kvs) if collect_kv else x
+
+
+def loss_fn(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Next-token cross entropy. batch: {tokens [B,S], labels [B,S], and
+    optionally image_embeds/frame_embeds [B,S',d] for stub frontends}."""
+    extra = batch.get("extra_embeds")
+    x = forward_hidden(params, batch["tokens"], cfg, extra_embeds=extra)
+    labels = batch["labels"]
+    if extra is not None:
+        # stub-frontend positions produce no LM loss
+        pad = jnp.full(extra.shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return C.chunked_xent_loss(params["embedding"], x, labels, cfg)
+
+
+# -- serving ---------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    s_alloc = cache_alloc_len(cfg, seq_len)
+    dt = C.param_dtype(cfg)
+    shape = (cfg.n_layers, batch, s_alloc, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "kv_pos": jnp.full((batch, s_alloc), -1, jnp.int32),
+    }
+
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    extra_embeds: jax.Array | None = None,
+    max_len: int | None = None,
+):
+    """Full prompt pass. Returns (last-token logits [B, V], cache).
+
+    ``max_len`` reserves decode headroom in the cache (defaults to the prompt
+    length — the dry-run's "decode against a seq_len cache" semantics)."""
+    x, (ks, vs) = forward_hidden(
+        params, tokens, cfg, extra_embeds=extra_embeds, collect_kv=True
+    )
+    b, s = x.shape[0], x.shape[1]
+    s_alloc = cache_alloc_len(cfg, max_len or s)
+    if s_alloc < s:  # ring buffer: keep the last window, aligned to slots
+        start = s - s_alloc  # ring slot of position p is p % s_alloc; since
+        ks = ks[:, :, start:]  # s_alloc | window and we keep a contiguous
+        vs = vs[:, :, start:]  # tail, slot order is a rotation — rebuild pos
+        kept_pos = jnp.arange(start, s)
+        slots = kept_pos % s_alloc
+        inv = jnp.argsort(slots)
+        ks = ks[:, :, inv]
+        vs = vs[:, :, inv]
+        kv_pos = jnp.broadcast_to(kept_pos[inv], (b, s_alloc))
+    elif s_alloc > s:  # decode headroom
+        pad = s_alloc - s
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.concatenate(
+            [jnp.arange(s), jnp.full((pad,), -1, jnp.int32)]
+        )
+        kv_pos = jnp.broadcast_to(kv_pos, (b, s_alloc))
+    else:
+        kv_pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache = {
+        "k": logical_constraint(ks, "layers", "batch", "seq_kv", "kv_heads", "d_head"),
+        "v": logical_constraint(vs, "layers", "batch", "seq_kv", "kv_heads", "d_head"),
+        "kv_pos": kv_pos,
+    }
+    logits = C.logits_last(params["embedding"], x[:, -1], cfg)
+    return logits, cache
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,  # [B]
+    pos: jax.Array,  # [B] absolute position of the new token
+    cfg: ModelConfig,
+):
+    """One token for every sequence in the batch. Returns (logits, cache)."""
+    x, _ = _input_embeds(params, tokens[:, None], cfg, position_offset=0)
+    if not cfg.use_rope:  # learned positions need the true offset
+        x = C.embed_tokens(params["embedding"], tokens[:, None], cfg)
+        x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None]
+    s_alloc = cache["k"].shape[2]
+    slot = pos % s_alloc
+    kv_pos = cache["kv_pos"].at[jnp.arange(x.shape[0]), slot].set(pos)
+    windows = window_schedule(cfg)
+
+    def body(x, xs):
+        lp, kc, vc, win = xs
+        x, k_new, v_new = block_decode(
+            lp, x, kc, vc, kv_pos, pos, slot, win, cfg
+        )
+        return x, (k_new, v_new)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], windows)
+    )
+    x = _norm(params["final_norm"], x, cfg)
+    logits = C.logits_last(params["embedding"], x[:, 0], cfg)
+    new_cache = {"k": ks, "v": vs, "kv_pos": kv_pos}
+    return logits, new_cache

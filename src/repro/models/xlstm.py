@@ -1,0 +1,167 @@
+"""xLSTM LM (xlstm-125m): interleaved mLSTM (matrix memory) and sLSTM blocks.
+
+Layer schedule: every ``cfg.slstm_every``-th layer is an sLSTM block, the rest
+are mLSTM (the assignment's "sLSTM + mLSTM blocks"). mLSTM blocks use the
+xLSTM paper's pre-up-projection (pf=2); sLSTM blocks use a post gated FFN.
+
+Serving state is O(1) in context length — this is the assigned long_500k
+arch par excellence. There is no KV cache, hence (per DESIGN.md
+§Arch-applicability) nothing for the Wolf block manager to manage.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models import ssm
+
+# Block kinds are static Python data (tuple), so the two scans stay separate.
+
+
+def layer_kinds(cfg: ModelConfig) -> tuple[str, ...]:
+    k = cfg.slstm_every
+    return tuple(
+        "slstm" if (k and (i + 1) % k == 0) else "mlstm" for i in range(cfg.n_layers)
+    )
+
+
+def _mlstm_block_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d  # pf = 2 up-projection
+    dt = C.param_dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln": C.rmsnorm_init(d),
+        "up": C.dense_init(ks[0], (d, 2 * d_in), 0, dt),  # -> (x_in, gate)
+        "cell": ssm.mlstm_init(ks[1], d_in, cfg.n_heads, d_in // cfg.n_heads, dt),
+        "down": C.dense_init(ks[2], (d_in, d), 0, dt),
+    }
+
+
+def _mlstm_block(params, x, cfg: ModelConfig, state=None):
+    h = C.rmsnorm_apply(params["ln"], x, cfg.norm_eps)
+    up = h @ params["up"]
+    x_in, gate = jnp.split(up, 2, axis=-1)
+    y, new_state = ssm.mlstm_chunked(params["cell"], x_in, state=state)
+    y = y.astype(x.dtype) * jax.nn.silu(gate)
+    return x + y @ params["down"], new_state
+
+
+def _mlstm_block_decode(params, x_t, state, cfg: ModelConfig):
+    h = C.rmsnorm_apply(params["ln"], x_t, cfg.norm_eps)
+    up = h @ params["up"]
+    x_in, gate = jnp.split(up, 2, axis=-1)
+    y, new_state = ssm.mlstm_decode_step(params["cell"], state, x_in)
+    y = y * jax.nn.silu(gate)
+    return x_t + y @ params["down"], new_state
+
+
+def _slstm_block_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = C.param_dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    d_ff = int(d * 4 / 3 / 64) * 64 or d
+    return {
+        "ln": C.rmsnorm_init(d),
+        "cell": ssm.slstm_init(ks[0], d, cfg.n_heads, d // cfg.n_heads, dt),
+        "ln2": C.rmsnorm_init(d),
+        "ffn_gate": C.dense_init(ks[1], (d, d_ff), 0, dt),
+        "ffn_up": C.dense_init(ks[1], (d, d_ff), 0, dt),
+        "ffn_down": C.dense_init(ks[2], (d_ff, d), 0, dt),
+    }
+
+
+def _slstm_block(params, x, cfg: ModelConfig, state=None):
+    h = C.rmsnorm_apply(params["ln"], x, cfg.norm_eps)
+    y, new_state = ssm.slstm_apply(params["cell"], h, state=state)
+    x = x + y
+    h2 = C.rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+    ff = jax.nn.silu(h2 @ params["ffn_gate"]) * (h2 @ params["ffn_up"])
+    return x + ff @ params["ffn_down"], new_state
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    kinds = layer_kinds(cfg)
+    k_emb, *layer_keys = jax.random.split(rng, cfg.n_layers + 1)
+    layers = []
+    for kind, k in zip(kinds, layer_keys):
+        init = _mlstm_block_init if kind == "mlstm" else _slstm_block_init
+        layers.append(init(k, cfg))
+    return {
+        "embedding": C.embedding_init(k_emb, cfg),
+        "blocks": layers,  # heterogeneous: plain list, unrolled (12 layers)
+        "final_norm": C.rmsnorm_init(cfg.d_model),
+    }
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, *, remat: bool = True):
+    x = C.embed_tokens(params["embedding"], tokens, cfg)
+    kinds = layer_kinds(cfg)
+    for kind, lp in zip(kinds, params["blocks"]):
+        fn = _mlstm_block if kind == "mlstm" else _slstm_block
+        if remat:
+            fn = jax.checkpoint(fn, static_argnums=(2,))
+        x, _ = fn(lp, x, cfg)
+    return C.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = forward_hidden(params, batch["tokens"], cfg)
+    return C.chunked_xent_loss(params["embedding"], x, batch["labels"], cfg)
+
+
+# -- serving (recurrent state instead of KV cache) --------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    del seq_len  # O(1) state
+    kinds = layer_kinds(cfg)
+    states = []
+    for kind in kinds:
+        if kind == "mlstm":
+            d_in = 2 * cfg.d_model
+            states.append(
+                {"mlstm": ssm.mlstm_init_state_raw(batch, cfg.n_heads, d_in // cfg.n_heads)}
+            )
+        else:
+            states.append(
+                {"slstm": ssm.slstm_init_state(batch, cfg.n_heads, cfg.d_model // cfg.n_heads)}
+            )
+    return {"states": states}
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    x = C.embed_tokens(params["embedding"], tokens, cfg)
+    kinds = layer_kinds(cfg)
+    states = []
+    for kind, lp in zip(kinds, params["blocks"]):
+        fn = _mlstm_block if kind == "mlstm" else _slstm_block
+        x, st = jax.checkpoint(fn, static_argnums=(2,))(lp, x, cfg)
+        states.append({kind: st})
+    x = C.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = C.logits_last(params["embedding"], x[:, -1], cfg)
+    return logits, {"states": states}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    del pos  # recurrent: position-free
+    x = C.embed_tokens(params["embedding"], tokens[:, None], cfg)[:, 0]
+    kinds = layer_kinds(cfg)
+    new_states = []
+    for kind, lp, st in zip(kinds, params["blocks"], cache["states"]):
+        if kind == "mlstm":
+            x, new = _mlstm_block_decode(lp, x, st["mlstm"], cfg)
+            new_states.append({"mlstm": new})
+        else:
+            h = C.rmsnorm_apply(lp["ln"], x, cfg.norm_eps)
+            y, new = ssm.slstm_decode_step(lp["cell"], st["slstm"], h)
+            x = x + y
+            h2 = C.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps)
+            ff = jax.nn.silu(h2 @ lp["ffn_gate"]) * (h2 @ lp["ffn_up"])
+            x = x + ff @ lp["ffn_down"]
+            new_states.append({"slstm": new})
+    x = C.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = C.logits_last(params["embedding"], x, cfg)
+    return logits, {"states": new_states}

@@ -1,0 +1,190 @@
+"""Serving engine: continuous batching over the Wolf-KV paged cache.
+
+Request model:
+  * ``policy="append"``  — standard decode; blocks die only when the request
+    finishes (cold churn).
+  * ``policy="h2o:R"``   — heavy-hitter-style eviction: every new token
+    evicts one of the oldest R% cache entries at random (hot churn — the
+    serving analogue of the paper's hot pages).
+  * ``policy="window:W"``— sliding-window: tokens beyond W evicted in order
+    (prefix pages die whole — cheap reclamation).
+
+Each policy class is a Wolf-KV temperature group. The engine demonstrates
+the full loop: prefill → decode (paged-attention kernel) → eviction →
+compaction move-lists executed by the gc_compact kernel. WA is reported by
+the manager. Production posture: the same control plane scales to one
+manager per model replica; block tables ride along with the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kvcache.manager import WolfKVManager
+from repro.models.transformer import init_params
+from repro.serving.paged_model import (
+    apply_moves,
+    init_pools,
+    paged_decode_step,
+    paged_prefill,
+)
+
+POLICIES = ("append", "h2o", "window")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32 tokens
+    max_new: int
+    policy: str = "append"  # append | h2o:<rate%> | window:<W>
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def policy_kind(self) -> str:
+        return self.policy.split(":")[0]
+
+    @property
+    def policy_arg(self) -> int:
+        parts = self.policy.split(":")
+        return int(parts[1]) if len(parts) > 1 else 0
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        n_blocks: int = 256,
+        page: int = 16,
+        max_pages_per_seq: int = 32,
+        max_batch: int = 8,
+        groups: tuple[str, ...] = ("append", "h2o", "window"),
+        adaptive: bool = True,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.page = page
+        self.max_pages = max_pages_per_seq
+        self.max_batch = max_batch
+        self.group_of_policy = {k: i for i, k in enumerate(groups)}
+        self.params = init_params(jax.random.PRNGKey(seed), cfg)
+        self.pools = init_pools(cfg, n_blocks, page)
+        self.manager = WolfKVManager(
+            n_blocks, page, len(groups), adaptive=adaptive
+        )
+        self.queue: deque[Request] = deque()
+        self.running: list[Request] = []
+        self.rng = np.random.default_rng(seed)
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and len(self.running) < self.max_batch:
+            req = self.queue.popleft()
+            g = self.group_of_policy[req.policy_kind]
+            self.manager.add_sequence(req.rid, g)
+            # prefill: reserve slots for every prompt token, then one pass
+            wb = np.zeros(len(req.prompt), np.int32)
+            ws = np.zeros(len(req.prompt), np.int32)
+            for i in range(len(req.prompt)):
+                wb[i], ws[i] = self.manager.append_token(req.rid)
+            self.pools = apply_moves(self.pools, self.manager.drain_moves())
+            logits, self.pools = paged_prefill(
+                self.params, self.cfg, self.pools,
+                jnp.asarray(req.prompt[None], jnp.int32),
+                jnp.asarray(wb[None]), jnp.asarray(ws[None]),
+            )
+            req.out.append(int(jnp.argmax(logits[0])))
+            self.running.append(req)
+
+    def _evict(self, req: Request):
+        mgr, sid = self.manager, req.rid
+        seq = mgr.seqs[sid]
+        if req.policy_kind == "window":
+            w = max(req.policy_arg, self.page)
+            # evict everything below cache_len - w
+            lo = 0
+            hi = seq.cache_len - w
+            for ci in range(hi):
+                if ci < len(seq.valid) and seq.valid[ci]:
+                    mgr.evict_token(sid, ci)
+        elif req.policy_kind == "h2o":
+            rate = req.policy_arg or 50
+            # one-in, one-out beyond a warmup, from the oldest `rate`% alive
+            alive = np.flatnonzero(seq.valid[: seq.cache_len])
+            if len(alive) > 4 * self.page:
+                k = max(1, int(len(alive) * rate / 100))
+                victim = int(self.rng.choice(alive[:k]))
+                mgr.evict_token(sid, victim)
+
+    def step(self) -> dict:
+        """One engine iteration: admit, decode one token each, evict, GC."""
+        self._admit()
+        if not self.running:
+            return {"running": 0, "wa": self.manager.write_amplification}
+        b = len(self.running)
+        tokens = np.zeros(b, np.int32)
+        wb = np.zeros(b, np.int32)
+        ws = np.zeros(b, np.int32)
+        pos = np.zeros(b, np.int32)
+        for i, req in enumerate(self.running):
+            tokens[i] = req.out[-1]
+            pos[i] = self.manager.cache_len(req.rid)
+            wb[i], ws[i] = self.manager.append_token(req.rid)
+        self.pools = apply_moves(self.pools, self.manager.drain_moves())
+        tables = np.stack(
+            [self.manager.block_table(r.rid, self.max_pages) for r in self.running]
+        )
+        valid = np.stack(
+            [self.manager.slot_valid(r.rid, self.max_pages) for r in self.running]
+        )
+        lengths = np.asarray(
+            [self.manager.cache_len(r.rid) for r in self.running], np.int32
+        )
+        logits, self.pools = paged_decode_step(
+            self.params, self.cfg, self.pools,
+            jnp.asarray(tables), jnp.asarray(valid, jnp.int8),
+            jnp.asarray(lengths), jnp.asarray(wb), jnp.asarray(ws),
+            jnp.asarray(tokens), jnp.asarray(pos),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        still = []
+        for i, req in enumerate(self.running):
+            req.out.append(int(nxt[i]))
+            self._evict(req)
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.manager.finish_sequence(req.rid)
+            else:
+                still.append(req)
+        self.running = still
+        self.pools = apply_moves(self.pools, self.manager.drain_moves())
+        self.steps += 1
+        return {
+            "running": len(self.running),
+            "wa": self.manager.write_amplification,
+            "free_blocks": len(self.manager.free),
+        }
+
+    def run_until_drained(self, max_steps: int = 10_000) -> dict:
+        for _ in range(max_steps):
+            info = self.step()
+            if not self.running and not self.queue:
+                break
+        return {
+            "steps": self.steps,
+            "wa": self.manager.write_amplification,
+            "appended": self.manager.appended,
+            "copied": self.manager.copied,
+        }

@@ -1,0 +1,137 @@
+"""Transformer decode on the Wolf-KV paged cache.
+
+Shares parameters with models/transformer (same init_params tree), but the
+per-layer KV lives in the global block pool and attention goes through the
+paged-attention Pallas kernel, consuming Wolf-KV's block tables + validity
+masks. This is the device data path of the serving engine; the host control
+plane is kvcache/manager.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.models import common as C
+from repro.models.transformer import _norm, _ffn
+
+
+def init_pools(cfg: ModelConfig, n_blocks: int, page: int) -> dict:
+    dt = C.param_dtype(cfg)
+    shape = (cfg.n_layers, n_blocks, page, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def paged_decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    pools: dict,  # {"k","v": [L, N, P, Hkv, D]}
+    tables: jax.Array,  # [B, M] int32
+    slot_valid: jax.Array,  # [B, M, P] int8
+    lengths: jax.Array,  # [B] cache length INCLUDING the new token
+    write_blk: jax.Array,  # [B] block for the new token's KV
+    write_slot: jax.Array,  # [B]
+    tokens: jax.Array,  # [B]
+    pos: jax.Array,  # [B] absolute positions (for RoPE)
+):
+    """One decode token per sequence. Returns (logits [B, V], pools)."""
+    b = tokens.shape[0]
+    x = C.embed_tokens(params["embedding"], tokens[:, None], cfg)
+    bidx = jnp.arange(b)
+
+    def body(x, xs):
+        lp, k_pool, v_pool = xs
+        h = _norm(lp["ln1"], x, cfg)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        if cfg.use_rope:
+            q = C.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = C.apply_rope(k, pos[:, None], cfg.rope_theta)
+        k_pool = k_pool.at[write_blk, write_slot].set(k[:, 0])
+        v_pool = v_pool.at[write_blk, write_slot].set(v[:, 0])
+        attn = paged_attention(
+            q[:, 0], k_pool, v_pool, tables, lengths, slot_valid
+        )
+        x = x + jnp.einsum("bhk,hkd->bd", attn, lp["attn"]["wo"])[:, None]
+        h2 = _norm(lp["ln2"], x, cfg)
+        x = x + _ffn(lp, h2, cfg)
+        return x, (k_pool, v_pool)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], pools["k"], pools["v"])
+    )
+    x = _norm(params["final_norm"], x, cfg)
+    logits = C.logits_last(params["embedding"], x[:, 0], cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def paged_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    pools: dict,
+    tokens: jax.Array,  # [B, S]
+    write_blk: jax.Array,  # [B, S] per-token destination block
+    write_slot: jax.Array,  # [B, S]
+):
+    """Prompt pass that writes KV straight into the paged pool."""
+    from repro.models.attention import chunked_attention
+    from repro.models.transformer import window_schedule
+
+    b, s = tokens.shape
+    x, positions = (
+        C.embed_tokens(params["embedding"], tokens, cfg),
+        jnp.arange(s),
+    )
+    windows = window_schedule(cfg)
+    bflat = write_blk.reshape(-1)
+    sflat = write_slot.reshape(-1)
+
+    def body(x, xs):
+        lp, k_pool, v_pool, win = xs
+        h = _norm(lp["ln1"], x, cfg)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        if cfg.use_rope:
+            q = C.apply_rope(q, positions, cfg.rope_theta)
+            k = C.apply_rope(k, positions, cfg.rope_theta)
+        attn = chunked_attention(q, k, v, win, causal=True)
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["attn"]["wo"])
+        h2 = _norm(lp["ln2"], x, cfg)
+        x = x + _ffn(lp, h2, cfg)
+        k_pool = k_pool.at[bflat, sflat].set(k.reshape(b * s, *k.shape[2:]))
+        v_pool = v_pool.at[bflat, sflat].set(v.reshape(b * s, *v.shape[2:]))
+        return x, (k_pool, v_pool)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], pools["k"], pools["v"], windows)
+    )
+    x = _norm(params["final_norm"], x, cfg)
+    logits = C.logits_last(params["embedding"], x[:, -1], cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+def apply_moves(pools: dict, moves) -> dict:
+    """Execute the manager's compaction move list on-device (gc_compact)."""
+    import numpy as np
+
+    from repro.kernels.gc_compact.ops import gc_compact
+
+    if not moves:
+        return pools
+    mv = np.asarray(moves, np.int32)
+    sb, ss, db, ds = (jnp.asarray(mv[:, i]) for i in range(4))
+
+    def per_layer(kv):
+        k, v = kv
+        return gc_compact(k, v, sb, ss, db, ds)
+
+    k_new, v_new = jax.vmap(per_layer)((pools["k"], pools["v"]))
+    return {"k": k_new, "v": v_new}

@@ -1,0 +1,171 @@
+"""Automatic parameter/state sharding assignment (FSDP+TP hybrid).
+
+Weight placement does not change numerics — any sharding is *correct* (XLA
+inserts the collectives) — so instead of a hand table per arch we assign
+shardings greedily per tensor:
+
+  1. shard the largest dim divisible by |model| over ``model``  (TP/EP)
+  2. shard the largest remaining dim divisible by |data| over ``data`` (FSDP)
+  3. leave everything else replicated
+
+Leaves under a stacked-layer key ("layers", "encoder", "decoder", "blocks")
+skip their leading (layer) dim. This handles every assigned arch — including
+the awkward ones (56 or 25 heads vs a 16-way model axis) — without per-arch
+exceptions; the roofline/§Perf pass then *tunes* placements where it matters.
+
+Optimizer state (m/v) and the fp32 master copy inherit the param sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+STACKED_KEYS = ("layers", "encoder", "decoder", "blocks")
+
+# Semantic TP preferences: shard the dim that MATCHES the activation
+# sharding (heads for attention, experts/ff for MoE/MLP), so contractions
+# stay local instead of XLA re-gathering the whole weight per layer
+# (§Perf cell 3: wo sharded by d_model cost 7.9 GB/step of all-gathers).
+
+def _preferred_tp_dim(key: str, rank: int) -> int | None:
+    if key in ("wq", "wk", "wv"):
+        return rank - 2  # [d, H, dh] → heads
+    if key == "wo":
+        return 0  # attn [H, dh, d] / mlp [f, d] → H / f (moe [E,f,d]: E→greedy)
+    if key in ("wi_gate", "wi_up", "wi"):
+        return rank - 1  # [.., d, f] → f
+    return None
+
+
+def _spec_for_shape(
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    *,
+    skip_leading: bool = False,
+    axes: tuple[str, ...] = ("model", "data"),
+    preferred_model_dim: int | None = None,
+) -> P:
+    axes_avail = [a for a in axes if a in mesh.axis_names]
+    parts: list[Any] = [None] * len(shape)
+    start = 1 if (skip_leading and len(shape) > 1) else 0
+    order = sorted(
+        range(start, len(shape)), key=lambda i: shape[i], reverse=True
+    )
+    if preferred_model_dim is not None:
+        pd = preferred_model_dim + start
+        if pd < len(shape):
+            order = [pd] + [i for i in order if i != pd]
+    for mesh_axis in axes_avail:
+        size = mesh.shape[mesh_axis]
+        for i in order:
+            if parts[i] is None and shape[i] % size == 0 and shape[i] >= size:
+                parts[i] = mesh_axis
+                break
+        # only the model axis gets the semantic preference
+        if preferred_model_dim is not None and mesh_axis == "model":
+            order = sorted(
+                (i for i in range(start, len(shape))),
+                key=lambda i: shape[i],
+                reverse=True,
+            )
+    return P(*parts)
+
+
+def _is_stacked(path) -> bool:
+    for entry in path:
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if key in STACKED_KEYS:
+            return True
+    return False
+
+
+def auto_shardings(tree: Any, mesh: Mesh, *, mode: str = "auto") -> Any:
+    """Param-tree → NamedSharding-tree (same structure).
+
+    mode="auto": FSDP(data) + TP(model) hybrid — best for training, where
+    per-microbatch weight gathers amortize across the batch.
+    mode="tp":   TP(model) only, no data-axis sharding — the right placement
+    for decode/serving, where weights stream once per token and an FSDP
+    gather would push the whole model over ICI every step (§Perf cell 3).
+    """
+
+    def assign(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if any(k in ("pos_embed", "embed") for k in keys):
+            # row-gathered tables (token/pos embeddings): shard ONLY the row
+            # dim (vocab/position) — sharding the feature dim of a gather
+            # operand trips the SPMD partitioner ("slice dim size > dynamic
+            # slice dimension"); replicate when rows don't divide.
+            size = mesh.shape.get("model", 1)
+            axis = "model" if (shape[0] % size == 0 and size > 1) else None
+            return NamedSharding(mesh, P(axis, *([None] * (len(shape) - 1))))
+        stacked = _is_stacked(path)
+        last_key = keys[-1] if keys else ""
+        rank = len(shape) - (1 if stacked and len(shape) > 1 else 0)
+        spec = _spec_for_shape(
+            tuple(shape),
+            mesh,
+            skip_leading=stacked,
+            axes=("model",) if mode == "tp" else ("model", "data"),
+            preferred_model_dim=_preferred_tp_dim(last_key, rank),
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+def batch_shardings(tree: Any, mesh: Mesh) -> Any:
+    """Data-batch tree → shard dim0 over (pod, data)."""
+    bd = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def assign(leaf):
+        shape = getattr(leaf, "shape", ())
+        if not shape:
+            return NamedSharding(mesh, P())
+        size = int(np.prod([mesh.shape[a] for a in bd])) if bd else 1
+        if shape[0] % max(size, 1) == 0 and size > 1:
+            return NamedSharding(mesh, P(bd))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(assign, tree)
+
+
+def cache_shardings(tree: Any, mesh: Mesh, *, seq_axis: str = "model") -> Any:
+    """KV-cache tree sharding.
+
+    Layout conventions (see models/*.py init_cache):
+      rank-5 [L, B, S, H, D] → batch over (pod,data), S over ``seq_axis``
+      rank-4 [L, B, *, *]    → batch over (pod,data)          (ssm states)
+      rank-2/3 [B, ...]      → batch over (pod,data)
+    Falls back to replication when not divisible.
+    """
+    bd = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsize = int(np.prod([mesh.shape[a] for a in bd])) if bd else 1
+    ssize = mesh.shape[seq_axis] if seq_axis in mesh.axis_names else 1
+
+    def assign(leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if len(shape) >= 2 and shape[0] == 0:
+            return NamedSharding(mesh, P())
+        parts: list[Any] = [None] * len(shape)
+        if len(shape) == 5:  # [L, B, S, H, D]
+            if bd and shape[1] % bsize == 0:
+                parts[1] = bd
+            if ssize > 1 and shape[2] % ssize == 0:
+                parts[2] = seq_axis
+        elif len(shape) >= 2 and bd:
+            # first dim that matches a batch size
+            for i in (1, 0):
+                if i < len(shape) and shape[i] % bsize == 0 and shape[i] >= bsize:
+                    parts[i] = bd
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(assign, tree)

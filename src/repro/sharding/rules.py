@@ -1,0 +1,140 @@
+"""Logical-axis sharding rules (MaxText-style) + a context for applying them.
+
+Models annotate activations/params with *logical* axis names; a rules table
+maps logical names to mesh axes. Outside a rules context every annotation is a
+no-op, so the same model code runs in single-device smoke tests and in the
+512-device dry-run unchanged.
+
+Mesh axes (see launch/mesh.py):
+    pod    across pods (multi-pod DP)
+    data   FSDP / batch
+    model  TP / EP / SP
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None = replicated)
+DEFAULT_RULES: dict[str, object] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_kv": "model",        # KV-sequence sharding for decode (SP/flash-decoding)
+    "heads": "model",
+    "kv_heads": "model",
+    "d_model": None,
+    "d_ff": "model",
+    "vocab": "model",
+    # parameters (FSDP over data, TP over model)
+    "p_d_model": "data",
+    "p_heads": "model",
+    "p_kv_heads": "model",
+    "p_d_ff": "model",
+    "p_vocab": "model",
+    "p_experts": None,        # overridden to "model" when divisible (EP)
+    "layers": None,
+    # never sharded
+    "d_head": None,
+    "state": None,
+    "window": None,
+}
+
+
+class _RulesContext(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, object] = {}
+
+
+_CTX = _RulesContext()
+
+
+@contextlib.contextmanager
+def use_sharding_rules(mesh: Mesh, rules: Optional[dict] = None, /, **overrides):
+    """Activate logical-axis sharding for all ``logical_constraint`` calls."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    merged.update(overrides)
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, merged
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def resolve_spec(names: Sequence[Optional[str]]) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    rules = _CTX.rules or DEFAULT_RULES
+    mesh = _CTX.mesh
+    parts, used = [], set()
+    for name in names:
+        axis = rules.get(name) if name is not None else None
+        # Drop mesh axes that do not exist on the active mesh (e.g. "pod" on
+        # the single-pod mesh) and axes already consumed by an earlier dim.
+        if axis is not None and mesh is not None:
+            if isinstance(axis, (tuple, list)):
+                axis = tuple(a for a in axis if a in mesh.axis_names and a not in used)
+                axis = axis if axis else None
+            elif axis not in mesh.axis_names or axis in used:
+                axis = None
+        if axis is not None:
+            used.update(axis if isinstance(axis, tuple) else (axis,))
+        parts.append(axis)
+    return P(*parts)
+
+
+def logical_constraint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; identity w/o active mesh.
+
+    A logical axis is silently dropped (replicated) when the dimension size
+    does not divide the mesh axis size — this keeps reduced smoke configs and
+    odd head counts (e.g. hymba's 25 heads) compiling, at the cost of
+    replication, which the dry-run memory analysis then makes visible.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    assert len(names) == x.ndim, f"rank mismatch: {names} vs {x.shape}"
+    spec = resolve_spec(list(names))
+    # Divisibility check per dim.
+    fixed = []
+    for dim, axis in zip(x.shape, spec):
+        if axis is None:
+            fixed.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(axis if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def named_sharding(mesh: Mesh, *names: Optional[str]) -> NamedSharding:
+    """Build a NamedSharding for in_shardings/out_shardings declarations."""
+    rules = _CTX.rules or DEFAULT_RULES
+    parts, used = [], set()
+    for name in names:
+        axis = rules.get(name) if name is not None else None
+        if axis is not None:
+            if isinstance(axis, (tuple, list)):
+                axis = tuple(a for a in axis if a in mesh.axis_names and a not in used)
+                axis = axis or None
+            elif axis not in mesh.axis_names or axis in used:
+                axis = None
+        if axis is not None:
+            used.update(axis if isinstance(axis, tuple) else (axis,))
+        parts.append(axis)
+    return NamedSharding(mesh, P(*parts))

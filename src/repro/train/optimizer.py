@@ -1,0 +1,105 @@
+"""AdamW in pure JAX, with a mixed-precision master-copy layout.
+
+Layout (production TPU convention):
+  * model params: cfg.dtype (bf16 on the target) — what forward/backward see
+  * optimizer state: fp32 m, fp32 v, fp32 master params
+  * update math in fp32; bf16 params re-cast from the master every step
+
+The state tree mirrors the param tree, so the auto-sharder (FSDP+TP) applies
+to it unchanged — ZeRO-style sharded optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    decayed = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def adamw_init(params: Any) -> dict:
+    f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+    master = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        "master": master,
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads: Any,
+    opt_state: dict,
+    params: Any,
+    cfg: OptimizerConfig,
+) -> tuple[Any, dict, dict]:
+    """Returns (new params in model dtype, new opt state, metrics)."""
+    count = opt_state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    # tree_map over four trees at once
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_w = treedef.flatten_up_to(opt_state["master"])
+    flat_p = treedef.flatten_up_to(params)
+    new_m, new_v, new_w, new_p = [], [], [], []
+    for g, m, v, w, p in zip(flat_g, flat_m, flat_v, flat_w, flat_p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w
+        w = w - lr * step
+        new_m.append(m)
+        new_v.append(v)
+        new_w.append(w)
+        new_p.append(w.astype(p.dtype))
+    unflat = jax.tree_util.tree_unflatten
+    new_state = {
+        "m": unflat(treedef, new_m),
+        "v": unflat(treedef, new_v),
+        "master": unflat(treedef, new_w),
+        "count": count,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return unflat(treedef, new_p), new_state, metrics

@@ -1,0 +1,505 @@
+"""Trip-count-aware static analysis of compiled (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but our models scan over layers / microbatches / KV chunks, so flops, bytes
+and collective traffic would be undercounted by 10–200×. XLA:CPU annotates
+every while with ``backend_config={"known_trip_count":{"n":...}}`` — we walk
+the call graph (ENTRY → fusions/calls/whiles/conditionals) multiplying each
+computation's cost by its execution count.
+
+Per-computation costs:
+  * flops              2 · |output| · contraction-size for every ``dot``
+                       (elementwise flops ignored — documented; matmul
+                       dominates every assigned arch)
+  * hbm bytes          Σ (operand + result bytes) of every *top-level* op
+                       except no-data-movement ops; fusion internals are
+                       excluded (a fusion moves its boundary bytes once)
+  * collective bytes   result-shape bytes of all-reduce(×2) / all-gather /
+                       reduce-scatter(×group) / all-to-all / collective-
+                       permute; ``-start`` counted, ``-done`` skipped
+
+All values are PER DEVICE (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+)
+
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+    # dtype converts fuse into their consumers on TPU (bf16 reads with fp32
+    # MXU accumulation are native); XLA:CPU materializes them, which would
+    # otherwise double-count the traffic of every mixed-precision matmul.
+    "convert",
+}
+
+# ops traced through when resolving an operand's true stored size
+_TRANSPARENT_OPS = {"convert", "bitcast"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# result type is either a tuple "( ... )" (may contain /*index=N*/ comments
+# and layout parens like S(5)) or a single array type.
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*"
+    r"(?P<type>\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>[a-z0-9\-]+)\((?P<rest>.*)$"
+)
+# header params may contain nested tuple-typed args: match greedily to "->".
+_COMP_START_RE = re.compile(
+    r"^(ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # operands + attributes tail of the line
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    )
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k]["count"] += v["count"] * mult
+            self.coll_by_kind[k]["bytes"] += v["bytes"] * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[_Op]] = {}
+        self.op_types: dict[str, str] = {}  # global symbol table
+        self._passthrough: dict[str, str] = {}  # convert/bitcast → source
+        self._parse(text)
+        self._memo: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        current: list[_Op] | None = None
+        for line in text.splitlines():
+            if current is None:
+                m = _COMP_START_RE.match(line)
+                if m and line.rstrip().endswith("{"):
+                    current = []
+                    self.computations[m.group("name")] = current
+                continue
+            if line.startswith("}"):
+                current = None
+                continue
+            m = _OP_LINE_RE.match(line)
+            if not m:
+                continue
+            op = _Op(m.group("name"), m.group("type"), m.group("op"), m.group("rest"))
+            current.append(op)
+            self.op_types[op.name] = op.type_str
+            if op.op in _TRANSPARENT_OPS:
+                src = _OPERAND_RE.search(op.rest)
+                if src:
+                    self._passthrough[op.name] = src.group(1)
+
+    def _resolve_bytes(self, ref: str) -> int:
+        """Stored size of a value, tracing through converts/bitcasts (their
+        sources hold the real dtype that hits HBM)."""
+        seen = 0
+        while ref in self._passthrough and seen < 8:
+            ref = self._passthrough[ref]
+            seen += 1
+        return _shape_bytes(self.op_types.get(ref, ""))
+
+    # -- per-op costs -------------------------------------------------------
+
+    def _dot_flops(self, op: _Op) -> float:
+        out_elems = _shape_elems(op.type_str)
+        lhs_match = _OPERAND_RE.search(op.rest)
+        contraction = 1
+        if lhs_match:
+            lhs_type = self.op_types.get(lhs_match.group(1), "")
+            dims = _shape_dims(lhs_type)
+            cm = _CONTRACT_RE.search(op.rest)
+            if cm and dims:
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        contraction *= dims[int(idx)]
+        return 2.0 * out_elems * contraction
+
+    def _op_bytes(self, op: _Op) -> float:
+        if op.op in _NO_TRAFFIC_OPS:
+            return 0.0
+        result = float(_shape_bytes(op.type_str))
+        # Sliced/in-place ops: XLA aliases the big operand (donation / while-
+        # loop state), so traffic is the slice, not the whole buffer.
+        if op.op == "dynamic-slice":
+            return 2.0 * result  # read slice + write result
+        if op.op in ("dynamic-update-slice", "scatter"):
+            # operands: (target, update(s), indices...) — traffic ≈ 2·update
+            refs = _OPERAND_RE.findall(op.rest.split(" metadata=")[0])
+            if len(refs) >= 2:
+                upd = self._resolve_bytes(refs[1])
+                return 3.0 * upd  # read update, read+write slice region
+            return result
+        if op.op == "gather":
+            refs = _OPERAND_RE.findall(op.rest.split(" metadata=")[0])
+            idx = self._resolve_bytes(refs[1]) if len(refs) > 1 else 0
+            return 2.0 * result + idx  # gathered rows read + result written
+        if op.op in ("while", "conditional"):
+            return 0.0  # loop/branch state aliases; bodies counted separately
+        total = result
+        # operands: look up types of referenced values defined in this module
+        for ref in _OPERAND_RE.findall(op.rest.split(" metadata=")[0].split(", calls=")[0]):
+            total += self._resolve_bytes(ref)
+        return total
+
+    def _fusion_bytes(self, op: _Op, comp_name: str) -> float:
+        """Boundary traffic of a fusion, accounting for slicing inside it.
+
+        A fusion whose parameter is only consumed by dynamic-slice/gather ops
+        touches the slices, not the whole operand (XLA reads in-place); a
+        fusion whose root is a dynamic-update-slice writes the update region
+        and aliases the target buffer. Counting full operand/result sizes
+        would overcount scanned-KV-cache models by ~100×.
+        """
+        comp = self.computations.get(comp_name, [])
+        # map parameter index -> param op name; map op name -> op (in comp)
+        param_names: dict[int, str] = {}
+        by_name: dict[str, _Op] = {}
+        for inner in comp:
+            by_name[inner.name] = inner
+            if inner.op == "parameter":
+                m = re.match(r"(\d+)", inner.rest)
+                if m:
+                    param_names[int(m.group(1))] = inner.name
+        consumers: dict[str, list[_Op]] = defaultdict(list)
+        for inner in comp:
+            if inner.op == "parameter":
+                continue
+            for ref in _OPERAND_RE.findall(inner.rest.split(" metadata=")[0]):
+                consumers[ref].append(inner)
+
+        def through_converts(name: str, down: bool) -> str:
+            """Follow convert/bitcast/copy chains (producer- or consumer-ward)."""
+            for _ in range(8):
+                if down:
+                    uses = consumers.get(name, [])
+                    if len(uses) == 1 and uses[0].op in ("convert", "bitcast", "copy"):
+                        name = uses[0].name
+                        continue
+                else:
+                    o = by_name.get(name)
+                    if o is not None and o.op in ("convert", "bitcast", "copy"):
+                        refs = _OPERAND_RE.findall(o.rest.split(" metadata=")[0])
+                        if refs:
+                            name = refs[0]
+                            continue
+                break
+            return name
+
+        root = comp[-1] if comp else None
+        eff_root = by_name.get(through_converts(root.name, down=False)) if root else None
+        dus_target_params: set[str] = set()
+        if eff_root is not None and eff_root.op == "dynamic-update-slice":
+            refs = _OPERAND_RE.findall(eff_root.rest.split(" metadata=")[0])
+            if refs:
+                dus_target_params.add(through_converts(refs[0], down=False))
+
+        operand_refs = _OPERAND_RE.findall(
+            op.rest.split(" metadata=")[0].split(", kind=")[0]
+        )
+        total = 0.0
+        for idx, ref in enumerate(operand_refs):
+            pname = param_names.get(idx)
+            if pname is None:
+                total += self._resolve_bytes(ref)
+                continue
+            eff = through_converts(pname, down=True)
+            if pname in dus_target_params or eff in dus_target_params:
+                continue  # aliased in-place target
+            uses = [u for u in consumers.get(eff, []) if u.op != "parameter"]
+            if uses and all(u.op in ("dynamic-slice", "gather") for u in uses):
+                total += sum(2.0 * _shape_bytes(u.type_str) for u in uses)
+            else:
+                total += self._resolve_bytes(ref)
+        # result
+        if eff_root is not None and eff_root.op == "dynamic-update-slice":
+            refs = _OPERAND_RE.findall(eff_root.rest.split(" metadata=")[0])
+            upd = self._resolve_bytes(refs[1]) if len(refs) > 1 else 0
+            total += 2.0 * upd
+        else:
+            total += float(_shape_bytes(op.type_str))
+        return total
+
+    def _collective(self, op: _Op) -> tuple[str, float] | None:
+        for kind in COLLECTIVES:
+            if op.op == kind or op.op == kind + "-start":
+                b = float(_shape_bytes(op.type_str))
+                # Wire dtype: XLA:CPU promotes bf16 params to f32 before
+                # FSDP gathers (its dots are f32-only); a TPU build gathers
+                # the stored bf16. Scale to the convert-chain SOURCE dtype.
+                refs = _OPERAND_RE.findall(op.rest.split(" metadata=")[0])
+                if refs:
+                    src = self._resolve_bytes(refs[0])
+                    direct = _shape_bytes(self.op_types.get(refs[0], ""))
+                    if src and direct and src < direct:
+                        b *= src / direct
+                if kind == "all-reduce":
+                    b *= 2.0  # ring AR ≈ reduce-scatter + all-gather
+                elif kind == "reduce-scatter":
+                    m = _GROUPS_V2_RE.search(op.rest)
+                    g = int(m.group(2)) if m else 0
+                    if not g:
+                        m = _GROUPS_RE.search(op.rest)
+                        g = len(m.group(1).split(",")) if m else 1
+                    b *= max(g, 1)
+                return kind, b
+            if op.op == kind + "-done":
+                return kind, 0.0  # counted at -start
+        return None
+
+    # -- call graph ---------------------------------------------------------
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        total = Cost()
+        self._memo[name] = total  # break cycles defensively
+        for op in self.computations.get(name, ()):
+            if op.op == "dot":
+                total.flops += self._dot_flops(op)
+                total.bytes += self._op_bytes(op)
+            elif op.op == "fusion":
+                m = _CALLED_RE.search(op.rest)
+                if m:
+                    inner = self.comp_cost(m.group(1))
+                    total.flops += inner.flops  # dots inside fusions count
+                    total.coll_bytes += inner.coll_bytes
+                    total.bytes += self._fusion_bytes(op, m.group(1))
+                else:
+                    total.bytes += self._op_bytes(op)
+            elif op.op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _CALLED_RE.search(op.rest)
+                cm = _COND_RE.search(op.rest)
+                if bm:
+                    total.add(self.comp_cost(bm.group(1)), trip)
+                if cm:
+                    total.add(self.comp_cost(cm.group(1)), trip)
+            elif op.op == "conditional":
+                m = _BRANCHES_RE.search(op.rest)
+                if m:
+                    branches = [
+                        b.strip().lstrip("%") for b in m.group(1).split(",") if b.strip()
+                    ]
+                    costs = [self.comp_cost(b) for b in branches]
+                    if costs:  # one branch executes; take the max
+                        worst = max(costs, key=lambda c: c.flops + c.bytes)
+                        total.add(worst)
+                total.bytes += self._op_bytes(op)
+            elif op.op == "call":
+                m = _CALLED_RE.search(op.rest)
+                if m:
+                    total.add(self.comp_cost(m.group(1)))
+            else:
+                coll = self._collective(op)
+                if coll is not None:
+                    kind, b = coll
+                    if b > 0:
+                        total.coll_bytes += b
+                        total.coll_by_kind[kind]["count"] += 1
+                        total.coll_by_kind[kind]["bytes"] += b
+                    continue
+                total.bytes += self._op_bytes(op)
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        # fusions/while bodies are reached via the call graph from ENTRY; the
+        # ENTRY computation is the one referenced nowhere else — XLA puts it
+        # last and marks it in the header, but we kept only names. Heuristic:
+        # the computation named like "main" or the largest one not called.
+        called = set()
+        for ops in self.computations.values():
+            for op in ops:
+                for pat in (_CALLED_RE, _COND_RE):
+                    m = pat.search(op.rest)
+                    if m:
+                        called.add(m.group(1))
+                m = _BRANCHES_RE.search(op.rest)
+                if m:
+                    called.update(
+                        b.strip().lstrip("%") for b in m.group(1).split(",")
+                    )
+        roots = [n for n in self.computations if n not in called]
+        main = [n for n in roots if "main" in n]
+        entry = main[0] if main else (roots[0] if roots else "")
+        return self.comp_cost(entry)
+
+
+def analyze_hlo(text: str) -> dict:
+    mod = HloModule(text)
+    cost = mod.entry_cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.coll_bytes,
+        "collectives": {k: dict(v) for k, v in cost.coll_by_kind.items()},
+        "n_computations": len(mod.computations),
+    }
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Back-compat summary: {kind: {count, bytes}, total_bytes} (trip-aware)."""
+    res = analyze_hlo(hlo_text)
+    out = dict(res["collectives"])
+    out["total_bytes"] = res["collective_bytes"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attribution CLI for §Perf work:
+#   PYTHONPATH=src python -m repro.utils.hlo <file.hlo.txt> [--top N]
+# ---------------------------------------------------------------------------
+
+def attribute(text: str) -> tuple[dict, dict]:
+    """(bytes by op kind, collective bytes by (kind, shape)) with trip counts."""
+    mod = HloModule(text)
+    mults: dict[str, float] = defaultdict(float)
+
+    def walk(name: str, m: float):
+        mults[name] += m
+        for op in mod.computations.get(name, ()):
+            if op.op == "while":
+                t = _TRIP_RE.search(op.rest)
+                trip = int(t.group(1)) if t else 1
+                for pat in (_CALLED_RE, _COND_RE):
+                    mm = pat.search(op.rest)
+                    if mm:
+                        walk(mm.group(1), m * trip)
+            elif op.op in ("fusion", "call"):
+                mm = _CALLED_RE.search(op.rest)
+                if mm:
+                    walk(mm.group(1), m)
+
+    called = set()
+    for ops in mod.computations.values():
+        for op in ops:
+            for pat in (_CALLED_RE, _COND_RE):
+                m = pat.search(op.rest)
+                if m:
+                    called.add(m.group(1))
+    roots = [n for n in mod.computations if n not in called]
+    entry = next((n for n in roots if "main" in n), roots[0] if roots else "")
+    walk(entry, 1.0)
+
+    by_kind: dict[str, float] = defaultdict(float)
+    coll_detail: dict[str, float] = defaultdict(float)
+    for name, ops in mod.computations.items():
+        m = mults.get(name, 0.0)
+        if not m:
+            continue
+        for op in ops:
+            coll = mod._collective(op)
+            if coll:
+                kind, b = coll
+                if b:
+                    coll_detail[f"{kind} {op.type_str[:48]}"] += b * m
+                continue
+            if op.op == "fusion":
+                cm = _CALLED_RE.search(op.rest)
+                if cm:
+                    by_kind["fusion"] += mod._fusion_bytes(op, cm.group(1)) * m
+                    continue
+            by_kind[op.op] += mod._op_bytes(op) * m
+    return dict(by_kind), dict(coll_detail)
+
+
+def main(argv=None):
+    import argparse
+    import json as _json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args(argv)
+    text = open(args.path).read()
+    print(_json.dumps(analyze_hlo(text), indent=2, default=str))
+    by_kind, coll = attribute(text)
+    print("\n-- HBM bytes by op kind --")
+    for k, v in sorted(by_kind.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"{k:28s} {v/1e9:10.2f} GB")
+    print("\n-- collective bytes by op/shape --")
+    for k, v in sorted(coll.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"{k:80s} {v/1e9:10.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline terms for TPU v5e from a compiled dry-run artifact.
+
+Hardware constants (per the assignment):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+All three terms are computed PER DEVICE (the SPMD module is per-device), so
+    compute    = flops_dev / peak
+    memory     = bytes_dev / hbm_bw
+    collective = coll_bytes_dev / ici_bw
+which equals the assignment's global form (global = dev × chips on both
+numerator and denominator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_dev: float
+    hbm_bytes_dev: float
+    coll_bytes_dev: float
+    n_chips: int
+    model_flops_global: float = 0.0  # 6·N·D (train) or 2·N·D (inference)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much compiled compute is 'useful'."""
+        total = self.flops_dev * self.n_chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU upper bound: useful flops / (time at the dominant
+        term × peak). This is the score we hillclimb."""
+        t = self.bound_s
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_global / self.n_chips) / (t * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_dev": self.flops_dev,
+            "hbm_bytes_dev": self.hbm_bytes_dev,
+            "coll_bytes_dev": self.coll_bytes_dev,
+            "n_chips": self.n_chips,
+            "model_flops_global": self.model_flops_global,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def memory_floor_bytes(
+    kind: str,
+    *,
+    params_bytes_dev: float,
+    cache_bytes_dev: float = 0.0,
+    act_boundary_bytes_dev: float = 0.0,
+) -> float:
+    """Analytic lower bound on per-device HBM traffic for one step — the
+    'ideal TPU' counterpart to the static-HLO estimate (which inherits some
+    CPU-lowering copy noise; both are reported).
+
+      decode : stream weights once + read the KV cache once
+      prefill: stream weights + write cache + activation boundaries (remat)
+      train  : weights bf16 r + grad f32 w + (m,v,master) f32 r/w
+               (= 30 bytes/param) + 2× activation boundaries
+    """
+    if kind == "decode":
+        return params_bytes_dev + cache_bytes_dev
+    if kind == "prefill":
+        return params_bytes_dev + cache_bytes_dev + act_boundary_bytes_dev
+    per_param = 2 + 4 + 3 * 4 + 3 * 4  # bf16 read + f32 grad + opt r/w
+    return params_bytes_dev / 2 * per_param + 2 * act_boundary_bytes_dev
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training, 2·N·D for inference-style passes (assignment's
+    MODEL_FLOPS convention; attention flops excluded by convention)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,175 @@
+"""Tests for OP allocation (paper §5.5) — closed form vs oracle optimum.
+
+Reproduces the paper's Figs. 4/5 claim: the closed form (eq. 8) is on average
+within ~1% of the hill-climbed optimum, worst cases within ~2–9% for very
+skewed workloads.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    allocate_by_frequency,
+    allocate_by_size,
+    allocate_closed_form,
+    group_wa,
+    hillclimb_allocation,
+    optimal_allocation,
+    total_wa,
+)
+
+
+def _wa(s, p, op):
+    return float(total_wa(jnp.asarray(s), jnp.asarray(p), jnp.asarray(op)))
+
+
+class TestPolicies:
+    def test_size_policy_sums(self):
+        s = jnp.asarray([100.0, 300.0, 600.0])
+        op = allocate_by_size(s, 500.0)
+        assert float(jnp.sum(op)) == pytest.approx(500.0, rel=1e-6)
+        np.testing.assert_allclose(np.asarray(op), [50.0, 150.0, 300.0], rtol=1e-5)
+
+    def test_frequency_policy_sums(self):
+        p = jnp.asarray([0.1, 0.9])
+        op = allocate_by_frequency(p, 1000.0)
+        np.testing.assert_allclose(np.asarray(op), [100.0, 900.0], rtol=1e-5)
+
+    def test_closed_form_is_average_and_sums(self):
+        s = jnp.asarray([1000.0, 1000.0])
+        p = jnp.asarray([0.1, 0.9])
+        op_total = 600.0
+        cf = allocate_closed_form(s, p, op_total, cold_rule=False)
+        by_s = allocate_by_size(s, op_total)
+        by_p = allocate_by_frequency(p, op_total)
+        np.testing.assert_allclose(
+            np.asarray(cf), np.asarray(0.5 * (by_s + by_p)), rtol=1e-5
+        )
+        assert float(jnp.sum(cf)) == pytest.approx(op_total, rel=1e-5)
+
+    def test_size_policy_equalizes_delta(self):
+        # §5.5.1: greedy-across-groups equalizes δ — eq. 6 realizes that point.
+        s = jnp.asarray([500.0, 2000.0, 8000.0])
+        op = allocate_by_size(s, 3000.0)
+        from repro.core import group_delta
+
+        d = np.asarray(group_delta(s, op))
+        assert np.ptp(d) < 1e-4
+
+    def test_cold_rule_triggers(self):
+        # Coldest group 1000× colder per page than the rest → fixed 5% alloc.
+        s = jnp.asarray([10_000.0, 1_000.0, 1_000.0])
+        p = jnp.asarray([0.0001, 0.4999, 0.5])
+        op_total = 5_000.0
+        cf = allocate_closed_form(s, p, op_total, cold_rule=True)
+        assert float(cf[0]) == pytest.approx(0.05 * 1_000.0, rel=1e-4)
+        assert float(jnp.sum(cf)) == pytest.approx(op_total, rel=1e-4)
+        # And the cold rule should HELP: less WA than the raw closed form.
+        raw = allocate_closed_form(s, p, op_total, cold_rule=False)
+        assert _wa(s, p, cf) <= _wa(s, p, raw) + 1e-6
+
+
+class TestNearOptimality:
+    """The paper's Fig. 4/5 style sweep (reduced Q for CI speed)."""
+
+    def _sweep(self, n_groups, q, lba_pba):
+        # Partition size-space and frequency-space into Q chunks; enumerate a
+        # spread of configurations (paper §5.5.3's brute-force methodology).
+        rng = np.random.default_rng(n_groups * 100 + q)
+        lba = 100_000.0
+        op_total = lba * (1.0 / lba_pba - 1.0)
+        rel_errs = []
+        for _ in range(12):
+            s_chunks = rng.multinomial(q - n_groups, np.ones(n_groups) / n_groups) + 1
+            p_chunks = rng.multinomial(q - n_groups, np.ones(n_groups) / n_groups) + 1
+            s = s_chunks / q * lba
+            p = p_chunks / q
+            cf = allocate_closed_form(
+                jnp.asarray(s), jnp.asarray(p), op_total, cold_rule=False
+            )
+            opt = optimal_allocation(jnp.asarray(s), jnp.asarray(p), jnp.asarray(op_total))
+            wa_cf = _wa(s, p, cf)
+            wa_opt = _wa(s, p, opt)
+            assert wa_opt <= wa_cf + 1e-4, "optimum must not be worse"
+            rel_errs.append((wa_cf - wa_opt) / wa_opt)
+        return np.asarray(rel_errs)
+
+    @pytest.mark.parametrize("n_groups", [2, 3, 5])
+    def test_closed_form_near_optimal(self, n_groups):
+        errs = self._sweep(n_groups, q=10, lba_pba=0.7)
+        # Paper Fig. 4 (Q=10): average < 1%, max ≈ 2%.
+        assert errs.mean() < 0.015, f"avg {errs.mean():.4f}"
+        assert errs.max() < 0.06, f"max {errs.max():.4f}"
+
+    @pytest.mark.parametrize("lba_pba", [0.6, 0.8, 0.9])
+    def test_closed_form_across_op_levels(self, lba_pba):
+        errs = self._sweep(3, q=10, lba_pba=lba_pba)
+        assert errs.mean() < 0.02
+
+    def test_hillclimb_agrees_with_convex_opt(self):
+        s = jnp.asarray([30_000.0, 70_000.0])
+        p = jnp.asarray([0.8, 0.2])
+        op_total = 40_000.0
+        hc = hillclimb_allocation(s, p, op_total, block_pages=128)
+        opt = optimal_allocation(s, p, jnp.asarray(op_total))
+        assert _wa(s, p, hc) == pytest.approx(_wa(s, p, opt), rel=5e-3)
+
+    def test_2modal_matches_fig3_shape(self):
+        # Fig. 3: scan the division point for a 2-group workload; the optimum
+        # must sit between the size-only and frequency-only division points,
+        # and eq. 8 (their average) must be within a few % of the optimum WA.
+        s = jnp.asarray([50_000.0, 50_000.0])
+        p = jnp.asarray([0.2, 0.8])
+        op_total = 30_000.0
+        fracs = np.linspace(0.02, 0.98, 97)
+        was = np.asarray(
+            [_wa(s, p, jnp.asarray([f * op_total, (1 - f) * op_total])) for f in fracs]
+        )
+        best = was.min()
+        cf = allocate_closed_form(s, p, op_total, cold_rule=False)
+        assert _wa(s, p, cf) < best * 1.03
+
+
+class TestPropertyBased:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.integers(min_value=2, max_value=8),
+        st.floats(min_value=0.55, max_value=0.95),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_closed_form_valid_simplex(self, n, lba_pba, seed):
+        rng = np.random.default_rng(seed)
+        s = rng.uniform(1.0, 100.0, n)
+        s = s / s.sum() * 100_000.0
+        p = rng.uniform(0.0, 1.0, n)
+        p = p / p.sum()
+        op_total = 100_000.0 * (1.0 / lba_pba - 1.0)
+        cf = np.asarray(
+            allocate_closed_form(jnp.asarray(s), jnp.asarray(p), op_total)
+        )
+        assert (cf >= -1e-3).all(), "allocations must be non-negative"
+        assert cf.sum() == pytest.approx(op_total, rel=1e-4), "must spend all OP"
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_closed_form_beats_single_group_mixing(self, seed):
+        # Separating groups and allocating per eq. 8 should never be worse
+        # than the no-separation baseline WA at the same total OP (grey line
+        # in Fig. 10) for genuinely skewed workloads.
+        rng = np.random.default_rng(seed)
+        n = rng.integers(2, 6)
+        s = rng.uniform(10.0, 100.0, n)
+        s = s / s.sum() * 100_000.0
+        p = rng.dirichlet(np.ones(n) * 0.3) + 1e-4
+        p = p / p.sum()
+        hit = p / s
+        if hit.max() / hit.min() < 4.0:
+            return  # not skewed enough for a guaranteed win
+        op_total = 100_000.0 * (1.0 / 0.7 - 1.0)
+        cf = allocate_closed_form(jnp.asarray(s), jnp.asarray(p), op_total)
+        wa_sep = _wa(s, p, cf)
+        wa_mix = float(group_wa(jnp.asarray(100_000.0), jnp.asarray(op_total)))
+        assert wa_sep < wa_mix * 1.02

@@ -1,0 +1,114 @@
+"""Tests for the analytical WA model (paper §4 + Appendix A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import analytics as A
+
+
+class TestBlockLifetime:
+    def test_full_decay_matches_harmonic_sum(self):
+        # Paper §4.1: expected updates until 0→ via harmonic sum ≈ LBA(ln B + γ).
+        B, LBA = 128, 100_000
+        harmonic = LBA * sum(1.0 / i for i in range(1, B + 1))
+        euler = LBA * (np.log(B) + np.euler_gamma)
+        assert abs(harmonic - euler) / harmonic < 1e-3
+
+    def test_eq1_eq2_inverse(self):
+        B, LBA = 128.0, 1e5
+        g = jnp.linspace(1.0, B, 50)
+        x = A.block_decay_updates(g, b=B, lba=LBA)
+        g2 = A.block_live_pages(x, b=B, lba=LBA)
+        np.testing.assert_allclose(np.asarray(g2), np.asarray(g), rtol=1e-5)
+
+    def test_decay_monotone(self):
+        B, LBA = 64.0, 5e4
+        x = jnp.linspace(0.0, 5 * LBA, 100)
+        g = np.asarray(A.block_live_pages(x, b=B, lba=LBA))
+        assert (np.diff(g) < 0).all()
+        assert g[0] == pytest.approx(B)
+
+
+class TestEquilibrium:
+    def test_eq3_endpoints(self):
+        # δ→1 means r→1 (no over-provisioning); δ→0 means r→0.
+        assert float(A.op_ratio_from_delta(jnp.asarray(1.0 - 1e-7))) == pytest.approx(
+            1.0, abs=1e-4
+        )
+        # r → 0 as δ → 0 (logarithmically: r = (1-δ)/|ln δ|).
+        assert float(A.op_ratio_from_delta(jnp.asarray(1e-9))) < 0.05
+
+    def test_bisection_inverts_eq3(self):
+        r = jnp.linspace(0.05, 0.99, 64)
+        delta = A.delta_from_op_ratio(r)
+        r2 = A.op_ratio_from_delta(delta)
+        np.testing.assert_allclose(np.asarray(r2), np.asarray(r), atol=2e-5)
+
+    def test_lambertw_agrees_with_bisection(self):
+        # Appendix A (eq. 9) is the same curve as eq. 3: cross-validate.
+        r = jnp.linspace(0.1, 0.95, 40)
+        d_bis = np.asarray(A.delta_from_op_ratio(r))
+        d_lw = np.asarray(A.delta_from_op_ratio_lambertw(r))
+        np.testing.assert_allclose(d_lw, d_bis, atol=5e-4)
+
+    def test_known_point_70pct(self):
+        # The paper's default LBA/PBA = 0.7 (Table 2). Solve eq. 3 numerically
+        # with an independent method (scipy-free secant in numpy).
+        r = 0.7
+
+        def f(d):
+            return (d - 1.0) / np.log(d) - r
+
+        lo, hi = 1e-9, 1 - 1e-9
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if f(mid) < 0:
+                lo = mid
+            else:
+                hi = mid
+        expected = 0.5 * (lo + hi)
+        got = float(A.delta_from_op_ratio(jnp.asarray(r)))
+        assert got == pytest.approx(expected, abs=1e-5)
+        # WA at 70% utilization is modest (paper Fig. 1: ~1.8–2.3 region).
+        wa = float(A.wa_from_op_ratio(jnp.asarray(r)))
+        assert 1.5 < wa < 3.0
+
+    def test_wa_monotone_in_r(self):
+        r = jnp.linspace(0.05, 0.98, 60)
+        wa = np.asarray(A.wa_from_op_ratio(r))
+        assert (np.diff(wa) > 0).all(), "more utilization ⇒ more WA"
+        assert wa[0] >= 1.0
+
+    def test_wa_delta_roundtrip(self):
+        d = jnp.linspace(0.01, 0.95, 20)
+        np.testing.assert_allclose(
+            np.asarray(A.delta_from_wa(A.wa_from_delta(d))), np.asarray(d), rtol=1e-4
+        )
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.floats(min_value=0.05, max_value=0.98))
+    def test_property_inverse_consistency(self, r):
+        d = float(A.delta_from_op_ratio(jnp.asarray(r, jnp.float32)))
+        assert 0.0 < d < 1.0
+        r_back = float(A.op_ratio_from_delta(jnp.asarray(d)))
+        assert r_back == pytest.approx(r, abs=1e-4)
+
+
+class TestLambertW:
+    def test_identity(self):
+        # W(a)·e^{W(a)} = a on the principal branch.
+        a = jnp.linspace(-0.36, 2.0, 50)
+        w = A.lambertw0(a)
+        np.testing.assert_allclose(
+            np.asarray(w * jnp.exp(w)), np.asarray(a), atol=2e-5
+        )
+
+    def test_known_values(self):
+        assert float(A.lambertw0(jnp.asarray(0.0))) == pytest.approx(0.0, abs=1e-7)
+        e = float(np.e)
+        assert float(A.lambertw0(jnp.asarray(e))) == pytest.approx(1.0, abs=1e-5)
+        assert float(A.lambertw0(jnp.asarray(-1.0 / e))) == pytest.approx(-1.0, abs=2e-2)

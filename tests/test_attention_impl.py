@@ -1,0 +1,37 @@
+"""Pallas-vs-XLA attention routing: both paths must produce the same model
+outputs (the flash kernel runs in interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.models import attention
+from repro.models.registry import get_config, get_model, smoke_config
+
+
+@pytest.fixture(autouse=True)
+def _restore_impl():
+    yield
+    attention.set_attention_impl("auto")
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "mixtral-8x22b"])
+def test_model_forward_same_under_pallas_attention(arch):
+    cfg = smoke_config(get_config(arch))
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = api.make_train_batch(
+        ShapeConfig("s", seq_len=64, global_batch=2, kind="train"),
+        jax.random.PRNGKey(1),
+    )
+    attention.set_attention_impl("xla")
+    loss_xla = float(api.loss_fn(params, batch))
+    attention.set_attention_impl("pallas")
+    loss_pallas = float(api.loss_fn(params, batch))
+    assert loss_pallas == pytest.approx(loss_xla, rel=1e-4), (loss_xla, loss_pallas)
+
+
+def test_auto_stays_xla_on_cpu():
+    assert attention._use_pallas(0) is False  # this container is CPU

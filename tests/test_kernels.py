@@ -1,0 +1,167 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode on CPU).
+
+Tolerances: fp32 tight; bf16 loose (scores are rounded to bf16 before
+softmax — the same trade every production bf16 attention kernel makes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.gc_compact.kernel import gc_compact
+from repro.kernels.gc_compact.ref import gc_compact_ref
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+def _mk(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.5).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,sq,skv,hq,hkv,d,causal,window",
+        [
+            (1, 128, 128, 4, 4, 64, True, 0),    # MHA causal
+            (2, 256, 256, 8, 2, 64, True, 0),    # GQA
+            (2, 128, 128, 4, 1, 128, True, 0),   # MQA, d=128
+            (1, 256, 256, 4, 2, 64, True, 64),   # sliding window
+            (2, 64, 192, 2, 2, 64, False, 0),    # cross (Sq≠Skv, non-causal)
+            (1, 100, 100, 4, 4, 64, True, 0),    # ragged tail (non-multiple)
+        ],
+    )
+    def test_matches_ref(self, dtype, b, sq, skv, hq, hkv, d, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = _mk(ks[0], (b, sq, hq, d), dtype)
+        k = _mk(ks[1], (b, skv, hkv, d), dtype)
+        v = _mk(ks[2], (b, skv, hkv, d), dtype)
+        out = flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=64, block_kv=64, interpret=True,
+        )
+        ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        st.sampled_from([64, 96, 128, 200]),
+        st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+        st.sampled_from([64, 128]),
+        st.integers(min_value=0, max_value=3),
+    )
+    def test_property_random_shapes(self, s, heads, d, seed):
+        hq, hkv = heads
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = _mk(ks[0], (1, s, hq, d), jnp.float32)
+        k = _mk(ks[1], (1, s, hkv, d), jnp.float32)
+        v = _mk(ks[2], (1, s, hkv, d), jnp.float32)
+        out = flash_attention(q, k, v, block_q=64, block_kv=64, interpret=True)
+        ref = flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5
+        )
+
+
+class TestPagedAttention:
+    def _case(self, b, hq, hkv, d, n, p, m, dtype, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = _mk(ks[0], (b, hq, d), dtype)
+        kp = _mk(ks[1], (n, p, hkv, d), dtype)
+        vp = _mk(ks[2], (n, p, hkv, d), dtype)
+        rng = np.random.default_rng(seed)
+        lengths = rng.integers(1, m * p + 1, b).astype(np.int32)
+        tables = np.full((b, m), -1, np.int32)
+        for i in range(b):
+            npages = -(-int(lengths[i]) // p)
+            tables[i, :npages] = rng.choice(n, npages, replace=False)
+        return q, kp, vp, jnp.asarray(tables), jnp.asarray(lengths)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,hq,hkv,d,n,p,m",
+        [
+            (2, 4, 4, 64, 16, 16, 4),   # MHA
+            (4, 8, 2, 64, 32, 16, 6),   # GQA
+            (2, 8, 1, 128, 16, 32, 3),  # MQA, d=128
+            (1, 4, 2, 64, 8, 8, 8),     # long table
+        ],
+    )
+    def test_matches_ref(self, dtype, b, hq, hkv, d, n, p, m):
+        q, kp, vp, tables, lengths = self._case(b, hq, hkv, d, n, p, m, dtype)
+        out = paged_attention(q, kp, vp, tables, lengths, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, tables, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+
+    def test_single_token_sequence(self):
+        q, kp, vp, tables, lengths = self._case(2, 4, 2, 64, 8, 16, 2, jnp.float32)
+        lengths = jnp.asarray([1, 1], jnp.int32)
+        out = paged_attention(q, kp, vp, tables, lengths, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, tables, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=1000))
+    def test_property_random_tables(self, seed):
+        q, kp, vp, tables, lengths = self._case(3, 4, 2, 64, 24, 8, 5, jnp.float32, seed)
+        out = paged_attention(q, kp, vp, tables, lengths, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, tables, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+class TestGcCompact:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n,p,h,d,m", [(16, 8, 2, 64, 12), (8, 16, 1, 128, 5)])
+    def test_matches_ref(self, dtype, n, p, h, d, m):
+        rng = np.random.default_rng(1)
+        kp = _mk(jax.random.PRNGKey(0), (n, p, h, d), dtype)
+        vp = _mk(jax.random.PRNGKey(1), (n, p, h, d), dtype)
+        # distinct destinations; a couple of no-op rows
+        dst_flat = rng.choice(n * p, m, replace=False)
+        src_flat = rng.choice(n * p, m, replace=False)
+        sb, ss = (src_flat // p).astype(np.int32), (src_flat % p).astype(np.int32)
+        db, ds = (dst_flat // p).astype(np.int32), (dst_flat % p).astype(np.int32)
+        sb[1] = -1
+        sb[m - 1] = -1
+        args = tuple(map(jnp.asarray, (sb, ss, db, ds)))
+        got_k, got_v = gc_compact(kp, vp, *args, interpret=True)
+        ref_k, ref_v = gc_compact_ref(kp, vp, *args)
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(ref_k))
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=1000))
+    def test_property_random_moves(self, seed):
+        rng = np.random.default_rng(seed)
+        n, p, h, d = 12, 8, 2, 64
+        m = int(rng.integers(1, 20))
+        kp = _mk(jax.random.PRNGKey(seed), (n, p, h, d), jnp.float32)
+        vp = _mk(jax.random.PRNGKey(seed + 1), (n, p, h, d), jnp.float32)
+        dst_flat = rng.choice(n * p, m, replace=False)
+        src_flat = rng.choice(n * p, m, replace=False)
+        sb = (src_flat // p).astype(np.int32)
+        ss = (src_flat % p).astype(np.int32)
+        db = (dst_flat // p).astype(np.int32)
+        ds = (dst_flat % p).astype(np.int32)
+        noop = rng.random(m) < 0.2
+        sb = np.where(noop, -1, sb).astype(np.int32)
+        args = tuple(map(jnp.asarray, (sb, ss, db, ds)))
+        got_k, got_v = gc_compact(kp, vp, *args, interpret=True)
+        ref_k, ref_v = gc_compact_ref(kp, vp, *args)
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(ref_k))
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))

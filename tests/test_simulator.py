@@ -1,0 +1,180 @@
+"""Simulator tests: equilibrium (Fig. 1), policy comparisons (Fig. 2),
+Wolf-vs-FDP adaptation (Figs. 6–8), and state invariants (hypothesis)."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.analytics import wa_from_op_ratio
+from repro.core.ssd import Geometry
+
+GEOM = Geometry(n_luns=8, blocks_per_lun=64, pages_per_block=16, lba_pba=0.7)
+
+
+def _expected_wa(geom):
+    s = geom.lba_pages
+    op_eff = geom.pba_pages - 3 * geom.pages_per_block - s
+    return float(wa_from_op_ratio(jnp.asarray(s / (s + op_eff))))
+
+
+def _check_invariants(geom, state):
+    live = np.asarray(state["live"])
+    valid = np.asarray(state["valid"])
+    fill = np.asarray(state["fill"])
+    assert int(state["n_dropped"]) == 0, "writes were dropped (pool exhausted)"
+    assert live.sum() == geom.lba_pages, "live-page conservation"
+    assert valid.sum() == geom.lba_pages, "valid-bitmap conservation"
+    np.testing.assert_array_equal(valid.sum(1), live, err_msg="live==Σvalid")
+    assert (fill >= live).all(), "fill ≥ live"
+    # mapping is a bijection onto valid slots
+    mb = np.asarray(state["map_blk"])
+    ms = np.asarray(state["map_slot"])
+    assert (mb >= 0).all()
+    assert valid[mb, ms].all(), "every mapped slot is valid"
+    sl = np.asarray(state["slot_lba"])
+    back = sl[mb, ms]
+    np.testing.assert_array_equal(back, np.arange(geom.lba_pages))
+
+
+class TestEquilibrium:
+    """Paper Fig. 1: eq. 3 vs simulation under a uniform workload."""
+
+    @pytest.mark.parametrize("r", [0.7, 0.8])
+    def test_lru_matches_eq3(self, r):
+        geom = dataclasses.replace(GEOM, lba_pba=r)
+        mcfg = dataclasses.replace(M.single_group(), gc_policy="lru")
+        res = M.simulate(geom, mcfg, [W.uniform(geom.lba_pages, 120_000)], seed=1)
+        wa = res.wa_curve(10_000)[-4:].mean()
+        assert wa == pytest.approx(_expected_wa(geom), rel=0.06)
+        _check_invariants(geom, res.state)
+
+    def test_greedy_at_least_as_good_as_lru(self):
+        res_lru = M.simulate(
+            GEOM, dataclasses.replace(M.single_group(), gc_policy="lru"),
+            [W.uniform(GEOM.lba_pages, 120_000)], seed=1,
+        )
+        res_greedy = M.simulate(
+            GEOM, M.single_group(), [W.uniform(GEOM.lba_pages, 120_000)], seed=1
+        )
+        assert res_greedy.wa_total <= res_lru.wa_total * 1.01
+
+    def test_wa_increases_with_utilization(self):
+        was = []
+        for r in (0.65, 0.75, 0.85):
+            geom = dataclasses.replace(GEOM, lba_pba=r)
+            res = M.simulate(
+                geom, M.single_group(), [W.uniform(geom.lba_pages, 100_000)], seed=2
+            )
+            was.append(res.wa_curve(10_000)[-3:].mean())
+        assert was[0] < was[1] < was[2]
+
+
+class TestSeparation:
+    """Separating hot/cold pages reduces WA (paper §5 premise, Fig. 10 grey)."""
+
+    def test_wolf_beats_single_group_on_skewed(self):
+        phase = W.two_modal(GEOM.lba_pages, 150_000, p_hot=0.9, frac_hot=0.2)
+        res_wolf = M.simulate(GEOM, M.wolf(), [phase], seed=3)
+        res_single = M.simulate(GEOM, M.single_group(), [phase], seed=3)
+        wa_w = res_wolf.wa_curve(10_000)[-4:].mean()
+        wa_s = res_single.wa_curve(10_000)[-4:].mean()
+        assert wa_w < wa_s * 0.90, f"wolf {wa_w:.3f} vs single {wa_s:.3f}"
+        _check_invariants(GEOM, res_wolf.state)
+
+
+class TestFrequencySwap:
+    """Paper §6.1 (Figs. 6–7): Wolf adapts ~instantly; FDP pays ~1.5×PBA."""
+
+    def test_wolf_vs_fdp_extra_migrations(self):
+        n = 120_000
+        ph1, ph2 = W.swap_phases(GEOM.lba_pages, n, p=(0.1, 0.9))
+        results = {}
+        for name, mcfg in (("wolf", M.wolf()), ("fdp", M.fdp())):
+            swap = M.simulate(GEOM, mcfg, [ph1, ph2], seed=4)
+            noswap = M.simulate(GEOM, mcfg, [ph1, ph1], seed=4)
+            results[name] = (
+                float(swap.mig[-1] - noswap.mig[-1]) / GEOM.pba_pages
+            )
+            _check_invariants(GEOM, swap.state)
+        # paper: 0.7% vs 152.1%; reduced geometry reproduces the gap
+        assert results["wolf"] < 0.15, results
+        assert results["fdp"] > 0.5, results
+        assert results["fdp"] / max(results["wolf"], 1e-3) > 5.0
+
+    def test_wolf_total_wa_beats_fdp_across_swap(self):
+        n = 100_000
+        ph1, ph2 = W.swap_phases(GEOM.lba_pages, n, p=(0.1, 0.9))
+        wa = {
+            name: M.simulate(GEOM, mcfg, [ph1, ph2], seed=5).wa_total
+            for name, mcfg in (("wolf", M.wolf()), ("fdp", M.fdp()))
+        }
+        assert wa["wolf"] < wa["fdp"]
+
+    def test_pairwise_swap_matrix_sample(self):
+        """Fig. 8 (sampled): swap the extreme pair of 5 exponential groups."""
+        base = W.exponential_groups(GEOM.lba_pages, 80_000)
+        swapped = W.pairwise_swap(base, 0, 4, 80_000)
+        extra = {}
+        for name, mcfg in (("wolf", M.wolf()), ("fdp", M.fdp())):
+            s = M.simulate(GEOM, mcfg, [base, swapped], seed=6)
+            b = M.simulate(GEOM, mcfg, [base, base], seed=6)
+            extra[name] = float(s.mig[-1] - b.mig[-1]) / GEOM.pba_pages
+        assert extra["wolf"] < extra["fdp"], extra
+
+
+class TestGreedyVsLru:
+    """Paper Fig. 2: after movement-op bursts, LRU's heuristic fails."""
+
+    def test_greedy_no_worse_after_double_swap(self):
+        n = 60_000
+        ph1, ph2 = W.swap_phases(GEOM.lba_pages, n, p=(0.02, 0.98))
+        phases = [ph1, ph2, dataclasses.replace(ph1, n_writes=n)]
+        mig = {}
+        for name, mcfg in (("greedy", M.wolf()), ("lru", M.wolf_lru())):
+            res = M.simulate(GEOM, mcfg, phases, seed=7)
+            # migrations in the final phase only
+            third = len(res.mig) // 3
+            mig[name] = float(res.mig[-1] - res.mig[2 * third])
+        assert mig["greedy"] <= mig["lru"] * 1.05, mig
+
+
+class TestDynamicWolf:
+    """§5.2/§5.6: dynamic group creation/merging with the bloom detector."""
+
+    def test_tpcc_like_runs_and_beats_single(self):
+        phase = W.tpcc_like(GEOM.lba_pages, 150_000)
+        res = M.simulate(GEOM, M.wolf_dynamic(), [phase], seed=8)
+        _check_invariants(GEOM, res.state)
+        n_groups = int(np.asarray(res.state["grp_active"]).sum())
+        assert n_groups >= 2
+        res_single = M.simulate(GEOM, M.single_group(), [phase], seed=8)
+        assert res.wa_curve(10_000)[-4:].mean() < res_single.wa_curve(10_000)[-4:].mean()
+
+
+class TestInvariantsProperty:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.sampled_from([(4, 32, 8), (8, 32, 16), (4, 64, 8)]),
+        st.floats(min_value=0.6, max_value=0.85),
+        st.integers(min_value=0, max_value=100),
+        st.sampled_from(["wolf", "fdp", "single", "wolf_lru"]),
+    )
+    def test_state_invariants_random(self, geo, r, seed, manager):
+        luns, bpl, ppb = geo
+        geom = Geometry(
+            n_luns=luns, blocks_per_lun=bpl, pages_per_block=ppb, lba_pba=r
+        )
+        mcfg = getattr(M, manager)() if manager != "single" else M.single_group()
+        rng = np.random.default_rng(seed)
+        frac = float(rng.uniform(0.2, 0.8))
+        p_hot = float(rng.uniform(0.6, 0.95))
+        phase = W.two_modal(geom.lba_pages, 25_000, p_hot=p_hot, frac_hot=frac)
+        res = M.simulate(geom, mcfg, [phase], seed=seed)
+        _check_invariants(geom, res.state)
+        assert res.wa_total >= 1.0

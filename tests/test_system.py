@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system.
+
+These exercise the public entry points the way a user would: the SSD
+experiment campaign, the training launcher, and the serving launcher —
+in-process, at smoke scale.
+"""
+
+import numpy as np
+import pytest
+
+
+class TestSsdCampaign:
+    def test_wolf_dominates_across_workloads(self):
+        """The paper's bottom line, end to end: under both a stable skewed
+        workload and a swap workload, Wolf's total WA ≤ FDP's."""
+        from repro.core import managers as M
+        from repro.core import workloads as W
+        from repro.core.ssd import Geometry
+
+        geom = Geometry(n_luns=4, blocks_per_lun=48, pages_per_block=16)
+        lba = geom.lba_pages
+        scenarios = {
+            "stable": [W.two_modal(lba, 50_000)],
+            "swap": list(W.swap_phases(lba, 40_000)),
+        }
+        for name, phases in scenarios.items():
+            wa = {
+                mgr: M.simulate(geom, preset(), phases, seed=0).wa_total
+                for mgr, preset in (("wolf", M.wolf), ("fdp", M.fdp))
+            }
+            assert wa["wolf"] <= wa["fdp"] * 1.02, (name, wa)
+
+    def test_model_predicts_simulator_across_geometry(self):
+        """Eq. 3 is geometry-free: two different geometries at the same
+        LBA/PBA land on the same WA (±10%)."""
+        import dataclasses
+
+        from repro.core import managers as M
+        from repro.core import workloads as W
+        from repro.core.ssd import Geometry
+
+        was = []
+        for bpl, ppb in ((48, 16), (24, 32)):
+            geom = Geometry(n_luns=4, blocks_per_lun=bpl, pages_per_block=ppb)
+            mcfg = dataclasses.replace(M.single_group(), gc_policy="lru")
+            res = M.simulate(geom, mcfg, [W.uniform(geom.lba_pages, 80_000)], seed=1)
+            was.append(float(res.wa_curve(8000)[-3:].mean()))
+        assert was[0] == pytest.approx(was[1], rel=0.10), was
+
+
+class TestTrainLauncher:
+    def test_train_main_runs_and_learns(self, tmp_path):
+        from repro.launch.train import main
+
+        rc = main([
+            "--arch", "internlm2-1.8b", "--smoke",
+            "--steps", "8", "--batch", "4", "--seq", "32",
+            "--checkpoint-dir", str(tmp_path), "--checkpoint-every", "4",
+            "--log-every", "4",
+        ])
+        assert rc == 0
+        from repro.train.checkpoint import latest_step
+
+        assert latest_step(tmp_path) == 8
+
+
+class TestServeLauncher:
+    def test_serve_main_drains(self):
+        from repro.launch.serve import main
+
+        rc = main(["--requests", "3", "--max-new", "6", "--prompt-len", "8",
+                   "--blocks", "96", "--page", "8"])
+        assert rc == 0

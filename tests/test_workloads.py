@@ -1,0 +1,69 @@
+"""Workload generator tests (pure numpy — no sim runs)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import workloads as W
+
+
+class TestPhases:
+    def test_sizes_partition_lba(self):
+        lba = 10_001
+        for phase in (
+            W.uniform(lba, 10),
+            W.two_modal(lba, 10),
+            W.exponential_groups(lba, 10),
+            W.tpcc_like(lba, 10),
+        ):
+            assert sum(phase.sizes) == lba
+            assert abs(sum(phase.probs) - 1.0) < 1e-9
+
+    def test_sample_respects_group_probs(self):
+        lba = 20_000
+        phase = W.two_modal(lba, 100_000, p_hot=0.9, frac_hot=0.5)
+        rng = np.random.default_rng(0)
+        lbas = phase.sample(rng)
+        assert lbas.min() >= 0 and lbas.max() < lba
+        hot_start = phase.sizes[0]
+        frac_hot_writes = (lbas >= hot_start).mean()
+        assert frac_hot_writes == pytest.approx(0.9, abs=0.01)
+
+    def test_page_rate_consistent_with_probs(self):
+        phase = W.exponential_groups(9_999, 10)
+        rate = phase.page_rate()
+        # aggregate rate per group == group prob
+        off = 0
+        for s, p in zip(phase.sizes, phase.probs):
+            assert rate[off:off + s].sum() == pytest.approx(p, rel=1e-5)
+            off += s
+
+    def test_swap_phases_swap_probs(self):
+        a, b = W.swap_phases(10_000, 5, p=(0.1, 0.9))
+        assert a.probs == (0.1, 0.9)
+        assert b.probs == (0.9, 0.1)
+        assert a.sizes == b.sizes
+
+    def test_pairwise_swap(self):
+        base = W.exponential_groups(10_000, 5)
+        sw = W.pairwise_swap(base, 0, 4, 5)
+        assert sw.probs[0] == base.probs[4]
+        assert sw.probs[4] == base.probs[0]
+        assert sw.probs[1:4] == base.probs[1:4]
+
+    def test_tpcc_shape_matches_fig9(self):
+        """Fig. 9: two clusters, hot ~8× hotter per page, cold majority."""
+        phase = W.tpcc_like(100_000, 10)
+        rates = [p / s for s, p in zip(phase.sizes, phase.probs)]
+        assert rates[2] / rates[1] == pytest.approx(8.0, rel=0.05)
+        assert phase.sizes[0] / 100_000 == pytest.approx(0.54, abs=0.01)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=100, max_value=100_000), st.integers(0, 999))
+    def test_property_split_sizes_exact(self, lba, seed):
+        rng = np.random.default_rng(seed)
+        fracs = rng.dirichlet(np.ones(rng.integers(2, 6)))
+        sizes = W.split_sizes(lba, fracs)
+        assert sum(sizes) == lba
+        assert all(s >= 0 for s in sizes)
