@@ -1,0 +1,132 @@
+"""Fleet throughput: one jitted vmap(lax.scan) over a policy × workload grid
+vs a Python loop of per-drive ``managers.simulate`` on the same grid.
+
+Reports drives/sec for both paths (post-warmup, i.e. compile excluded for
+both), the speedup, and the per-drive equilibrium WA curves of the grid —
+the batched analogue of the paper's §6 policy comparisons.
+
+The speedup is hardware-dependent: XLA:CPU executes batched gather/scatter
+serially per lane, so on CPU the vmap win comes from pmap sharding across
+cores (virtual host devices, set up below) and dispatch amortization; on an
+accelerator backend the same code batches the lanes in silicon.
+"""
+
+from __future__ import annotations
+
+import os
+
+# must be set before jax imports: expose every core as a host device so the
+# fleet can pmap-shard its sub-batches
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={os.cpu_count()}"
+    )
+
+import numpy as np
+
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.fleet import DriveSpec, simulate_fleet
+from repro.core.ssd import Geometry
+
+from benchmarks.common import report, table, timer
+
+POLICIES = (
+    ("wolf", M.wolf),
+    ("wolf-dynamic", M.wolf_dynamic),
+    ("fdp", M.fdp),
+    ("single", M.single_group),
+)
+
+
+def grid_specs(geom: Geometry, writes: int, seeds=(0,)) -> list[DriveSpec]:
+    lba = geom.lba_pages
+    workloads = (
+        ("uniform", lambda: (W.uniform(lba, writes),)),
+        ("two_modal", lambda: (W.two_modal(lba, writes),)),
+        ("swap", lambda: tuple(W.swap_phases(lba, writes // 2))),
+        ("tpcc", lambda: (W.tpcc_like(lba, writes),)),
+    )
+    return [
+        DriveSpec(
+            preset(), wl(), seed=seed, name=f"{pname}/{wname}#{seed}"
+        )
+        for seed in seeds
+        for pname, preset in POLICIES
+        for wname, wl in workloads
+    ]
+
+
+def run(full: bool = False) -> dict:
+    geom = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8)
+    writes = 60_000 if full else 20_000
+    seeds = (0, 1)  # 4 policies × 4 workloads × 2 seeds = 32 drives
+    specs = grid_specs(geom, writes, seeds)
+
+    # -- fleet path: warm the jit cache, then time steady-state ------------
+    simulate_fleet(geom, specs, sampler="jax", devices="auto")
+    with timer() as t_fleet:
+        fleet = simulate_fleet(geom, specs, sampler="jax", devices="auto")
+
+    # -- loop path: same grid, per-drive managers.simulate ------------------
+    # warm each (manager, phase-count) jit signature once at tiny scale so
+    # the timed loop measures runtime, not XLA compilation
+    for s in {(s.mcfg.name, len(s.phases)): s for s in specs}.values():
+        warm = [W.uniform(geom.lba_pages, 64) for _ in s.phases]
+        M.simulate(geom, s.mcfg, warm, seed=0)
+    with timer() as t_loop:
+        loop_results = [
+            M.simulate(geom, s.mcfg, list(s.phases), seed=s.seed)
+            for s in specs
+        ]
+
+    b = len(specs)
+    fleet_dps = b / t_fleet.dt
+    loop_dps = b / t_loop.dt
+    speedup = fleet_dps / loop_dps
+
+    window = writes // 10
+    rows = []
+    for i, s in enumerate(specs):
+        if s.seed != seeds[0]:
+            continue
+        curve = fleet.result(i).wa_curve(window)
+        rows.append({
+            "drive": s.name,
+            "wa_total": round(float(fleet.wa_total[i]), 3),
+            "wa_equilibrium": round(float(curve[-3:].mean()), 3),
+            "loop_wa_total": round(loop_results[i].wa_total, 3),
+        })
+    print(table(rows, list(rows[0].keys())))
+    summary = {
+        "drives": b,
+        "writes_per_drive": writes,
+        "host_devices": os.cpu_count(),
+        "fleet_sec": round(t_fleet.dt, 3),
+        "loop_sec": round(t_loop.dt, 3),
+        "fleet_drives_per_sec": round(fleet_dps, 3),
+        "loop_drives_per_sec": round(loop_dps, 3),
+        "speedup": round(speedup, 2),
+    }
+    out = {
+        "summary": summary,
+        "rows": rows,
+        "wa_curves": {
+            s.name: [round(float(x), 3) for x in fleet.result(i).wa_curve(window)]
+            for i, s in enumerate(specs) if s.seed == seeds[0]
+        },
+    }
+    report("fleet", out)
+    print(
+        f"\nfleet: {b} drives × {writes} writes in {t_fleet.dt:.2f}s "
+        f"({fleet_dps:.2f} drives/s) | loop: {t_loop.dt:.2f}s "
+        f"({loop_dps:.2f} drives/s) | speedup ×{speedup:.1f}"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+#   scripts/run_tests.sh          # full suite
+#   scripts/run_tests.sh --fast   # skip @pytest.mark.slow (multi-minute kernel sweeps)
+#   scripts/run_tests.sh <pytest args...>   # passed through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+args=()
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    args+=(-m "not slow")
+fi
+exec python -m pytest -q "${args[@]}" "$@"

@@ -1,0 +1,295 @@
+"""Fleet-scale batched SSD simulation: B drives in one jitted vmap(lax.scan).
+
+Where ``managers.simulate`` runs ONE drive per Python call, a fleet stacks
+the per-drive state pytrees and runs every drive lock-step through the same
+compiled write-step — per-drive differences (workload, seed, FDP assumption
+arrays, allocation / GC / detector / movement policy, group-count caps) are
+traced data, so wolf, wolf-dynamic, fdp and single-group drives batch into
+one ``vmap``. This is the substrate for exploring policy × workload grids
+("as many scenarios as you can imagine"): per-drive write streams are drawn
+on device by ``workloads.sample_phases_device`` inside the jitted region, so
+host work is O(B) setup, not O(B·T) sampling.
+
+Two execution details that matter on real hardware:
+
+* Drives are partitioned into at most two sub-batches by whether they carry
+  the §5.6 bloom detector: a vmapped ``lax.cond`` lowers to a select over
+  both branches, so keeping the (G × bits) filter pair out of non-bloom
+  drives' compiled step removes per-step full-filter selects (and the
+  state memory) for the common case.
+* ``devices=`` shards each sub-batch across the host's JAX devices with
+  ``pmap(vmap(...))`` — on CPU, spawn virtual devices via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* importing
+  jax (see benchmarks/bench_fleet.py) to use every core.
+
+Geometry is shared at the SHAPE level (array sizes: blocks, pages/block,
+logical span, group slots); within that shape, drives vary utilization and
+locality through their phase mix (e.g. a zero-probability cold tail emulates
+a shorter logical span at identical state shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.managers import RunResult, build_drive
+from repro.core.simulator import SimContext, make_step, policy_from_config
+from repro.core.ssd import Geometry, ManagerConfig
+from repro.core.workloads import Phase, phase_param_arrays, sample_phases_device
+
+# ManagerConfig fields that must agree fleet-wide: they are baked into the
+# shared static SimContext (paper constants), not per-drive policy data.
+_SHARED_FIELDS = (
+    "interval_frac", "ewma_a", "q_create", "w_intervals",
+    "cold_hit_rate_frac", "cold_op_frac", "gc_reserve_blocks",
+    "bloom_bits_per_page",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriveSpec:
+    """One drive of a fleet: a manager preset over a phase sequence."""
+
+    mcfg: ManagerConfig
+    phases: tuple[Phase, ...]
+    seed: int = 0
+    name: str | None = None
+
+    @property
+    def label(self) -> str:
+        return self.name or f"{self.mcfg.name}#{self.seed}"
+
+
+@dataclasses.dataclass
+class FleetResult:
+    app: np.ndarray  # [B, T] cumulative application writes
+    mig: np.ndarray  # [B, T] cumulative migrations
+    specs: list[DriveSpec]
+    # (original drive indices, stacked final-state pytree) per sub-batch
+    shards: list[tuple[list[int], dict]]
+    lbas: np.ndarray | None = None  # [B, T] when return_lbas=True
+
+    def state(self, i: int) -> dict:
+        """Final state pytree of drive i."""
+        for idx, states in self.shards:
+            if i in idx:
+                pos = idx.index(i)
+                return jax.tree_util.tree_map(lambda a: a[pos], states)
+        raise IndexError(i)
+
+    @property
+    def states(self) -> dict:
+        """Stacked state pytree — only for single-shard (unpartitioned)
+        fleets; mixed bloom/non-bloom fleets must use .state(i)."""
+        assert len(self.shards) == 1, "mixed fleet: use .state(i)"
+        return self.shards[0][1]
+
+    def result(self, i: int) -> RunResult:
+        """Per-drive view with the single-drive RunResult API."""
+        return RunResult(self.app[i], self.mig[i], self.state(i))
+
+    @property
+    def wa_total(self) -> np.ndarray:
+        """[B] end-to-end write amplification per drive."""
+        return (self.app[:, -1] + self.mig[:, -1]) / np.maximum(
+            self.app[:, -1], 1
+        )
+
+    def wa_curves(self, window: int = 2000) -> np.ndarray:
+        """[B, K] windowed WA over time per drive."""
+        return np.stack(
+            [self.result(i).wa_curve(window) for i in range(len(self.specs))]
+        )
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+@functools.lru_cache(maxsize=64)
+def _shard_runner(ctx: SimContext, n_total: int, on_device_sampler: bool,
+                  n_dev: int):
+    """Compiled runner for one sub-batch: vmap within a device shard,
+    pmap across shards when n_dev > 1."""
+
+    def run_one(st, stream, params, page_rate, policy):
+        if on_device_sampler:
+            lbas = sample_phases_device(stream, params, n_total)
+        else:
+            lbas = stream
+        cum = jnp.cumsum(params["counts"])
+
+        def rate_fn(s, lba, t):
+            ph = jnp.minimum(
+                jnp.searchsorted(cum, t, side="right"), cum.shape[0] - 1
+            )
+            return page_rate[ph, lba]
+
+        step = make_step(ctx, policy, rate_fn)
+        ts = jnp.arange(n_total, dtype=jnp.int32)  # shared write clock
+        st, trace = jax.lax.scan(step, st, (lbas, ts))
+        return st, trace, lbas
+
+    batched = jax.vmap(run_one)
+    if n_dev > 1:
+        return jax.pmap(batched)
+    return jax.jit(batched)
+
+
+def _reshape_shard(tree, n_dev):
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((n_dev, a.shape[0] // n_dev) + a.shape[1:]), tree
+    )
+
+
+def _flatten_shard(tree):
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), tree
+    )
+
+
+def simulate_fleet(
+    geom: Geometry,
+    specs: list[DriveSpec],
+    *,
+    sampler: str = "jax",
+    init_p_from_phase: bool = True,
+    return_lbas: bool = False,
+    devices: int | str | None = None,
+) -> FleetResult:
+    """Run B independent drives in a single jitted vmap(lax.scan).
+
+    sampler: "jax" draws every write stream on device inside the jitted
+    region (fast path); "numpy" replays the exact host streams
+    ``managers.simulate`` would draw for the same (phases, seed) — the two
+    paths then agree elementwise, which tests/test_fleet.py asserts.
+
+    devices: None/1 = pure single-device vmap; "auto" = shard over all
+    jax.devices(); int = shard over that many. Shard count is clamped to a
+    divisor of each sub-batch size.
+
+    Every spec must issue the same total number of writes (one shared scan).
+    """
+    assert specs, "empty fleet"
+    if sampler not in ("jax", "numpy"):
+        raise ValueError(f"unknown sampler {sampler!r}")
+    totals = {sum(ph.n_writes for ph in s.phases) for s in specs}
+    assert len(totals) == 1, f"drives must issue equal write totals: {totals}"
+    n_total = totals.pop()
+    base = specs[0].mcfg
+    for s in specs:
+        for f in _SHARED_FIELDS:
+            assert getattr(s.mcfg, f) == getattr(base, f), (
+                f"fleet drives must share ManagerConfig.{f} "
+                "(a static paper constant)"
+            )
+    if devices in (None, 1):
+        n_dev = 1
+    elif devices == "auto":
+        n_dev = len(jax.devices())
+    else:
+        n_dev = max(1, min(int(devices), len(jax.devices())))
+    p_max = max(len(s.phases) for s in specs)
+    g_wl = max(len(ph.sizes) for s in specs for ph in s.phases)
+
+    # partition by detector: the bloom branch (and its [G, bits] filters)
+    # only exists in the sub-batch that needs it
+    partitions: list[tuple[bool, list[int]]] = []
+    for use_bloom in (False, True):
+        idx = [i for i, s in enumerate(specs)
+               if (s.mcfg.td_mode == "bloom") == use_bloom]
+        if idx:
+            partitions.append((use_bloom, idx))
+
+    app = np.zeros((len(specs), n_total), np.int32)
+    mig = np.zeros((len(specs), n_total), np.int32)
+    lbas_out = np.zeros((len(specs), n_total), np.int32) if return_lbas else None
+    shards = []
+    for use_bloom, idx in partitions:
+        sub = [specs[i] for i in idx]
+        # group-cap padding is PER PARTITION: bloom filter width scales with
+        # 1/max_groups, so padding a bloom drive beyond its sub-batch's own
+        # cap would change its hashes vs the standalone managers.simulate
+        g_max = max(s.mcfg.max_groups for s in sub)
+        sts, policies, page_rates, params, streams = [], [], [], [], []
+        n_groups_max = 1
+        for s in sub:
+            st, n_groups, assumed_p, fdp_rate, rates = build_drive(
+                geom, s.mcfg, list(s.phases),
+                init_p_from_phase=init_p_from_phase,
+                g_max=g_max, use_bloom=use_bloom,
+            )
+            n_groups_max = max(n_groups_max, n_groups)
+            ctx_d = SimContext(
+                geom, dataclasses.replace(s.mcfg, max_groups=g_max),
+                n_groups, use_bloom=use_bloom,
+            )
+            policy = policy_from_config(ctx_d, assumed_p, fdp_rate)
+            # the drive keeps its OWN dynamic-group cap in the padded arrays
+            policy["max_groups"] = jnp.asarray(s.mcfg.max_groups, jnp.int32)
+            sts.append(st)
+            policies.append(policy)
+            page_rates.append(
+                np.concatenate(
+                    [rates,
+                     np.zeros((p_max - len(rates),) + rates.shape[1:],
+                              rates.dtype)]
+                )
+            )
+            params.append(
+                phase_param_arrays(list(s.phases), g_max=g_wl, p_max=p_max)
+            )
+            if sampler == "numpy":
+                rng = np.random.default_rng(s.seed)
+                streams.append(
+                    jnp.asarray(
+                        np.concatenate([ph.sample(rng) for ph in s.phases]),
+                        jnp.int32,
+                    )
+                )
+            else:
+                # key on the seed ALONE, mirroring the numpy sampler: a
+                # drive's stream is a function of (phases, seed), never of
+                # its position in the specs list (same seed + same phases
+                # → common random numbers for paired policy comparisons)
+                streams.append(jax.random.PRNGKey(s.seed))
+
+        ctx = SimContext(
+            geom,
+            dataclasses.replace(base, name="fleet", max_groups=g_max),
+            n_groups_max,
+            use_bloom=use_bloom,
+        )
+        args = (
+            _stack(sts),
+            jnp.stack(streams),
+            {k: jnp.asarray(np.stack([p[k] for p in params]))
+             for k in params[0]},
+            jnp.asarray(np.stack(page_rates)),
+            _stack(policies),
+        )
+        d = n_dev
+        while len(sub) % d:
+            d -= 1  # largest shard count dividing the sub-batch
+        runner = _shard_runner(ctx, n_total, sampler == "jax", d)
+        if d > 1:
+            args = tuple(_reshape_shard(a, d) for a in args)
+        st_f, trace, lbas = runner(*args)
+        if d > 1:
+            st_f, trace, lbas = (
+                _flatten_shard(st_f), _flatten_shard(trace),
+                _flatten_shard(lbas),
+            )
+        app[idx], mig[idx] = np.asarray(trace[0]), np.asarray(trace[1])
+        if return_lbas:
+            lbas_out[idx] = np.asarray(lbas)
+        shards.append((idx, st_f))
+
+    return FleetResult(
+        app=app, mig=mig, specs=list(specs), shards=shards, lbas=lbas_out,
+    )

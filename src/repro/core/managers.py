@@ -91,6 +91,57 @@ def fdp_assumed_arrays(phase: Phase, g_max: int):
     return assumed_p, fdp_rate
 
 
+def build_drive(
+    geom: Geometry,
+    mcfg: ManagerConfig,
+    phases: list[Phase],
+    *,
+    init_p_from_phase: bool = True,
+    g_max: int | None = None,
+    use_bloom: bool | None = None,
+):
+    """Pre-conditioned drive state + oracle arrays for a phase sequence.
+
+    Shared by :func:`simulate` (one drive) and ``core/fleet.py`` (stacked
+    drives). ``g_max`` pads the per-group arrays beyond ``mcfg.max_groups``
+    so drives with different group caps can share one vmapped state shape;
+    ``use_bloom`` forces bloom-filter sizing (fleets mixing bloom and
+    non-bloom drives must share it fleet-wide).
+
+    Returns (st, n_groups, assumed_p [g_max], fdp_rate [g_max],
+    page_rates [P, LBA] — the true per-page update rate of every phase).
+    """
+    import jax.numpy as jnp
+
+    # the drive's OWN cap decides whether pages are separated at all;
+    # g_max only pads the per-group arrays for fleet stacking
+    first = phases[0]
+    n_groups = 1 if mcfg.max_groups == 1 else len(first.sizes)
+    if g_max is not None and g_max != mcfg.max_groups:
+        mcfg = dataclasses.replace(mcfg, max_groups=g_max)
+    g_max = mcfg.max_groups
+    page_group = (
+        np.zeros(geom.lba_pages, np.int32)
+        if n_groups == 1
+        else first.page_group()
+    )
+    if use_bloom is None:
+        use_bloom = mcfg.td_mode == "bloom"
+    st = init_state(geom, mcfg, page_group, n_groups, use_bloom=use_bloom)
+    if init_p_from_phase and n_groups > 1:
+        p0 = np.zeros(g_max, np.float32)
+        p0[: len(first.probs)] = first.probs
+        st = dict(st)
+        st["grp_p"] = jnp.asarray(p0)
+    assumed_p, fdp_rate = fdp_assumed_arrays(first, g_max)
+    uniform_rate = np.full(geom.lba_pages, 1.0 / geom.lba_pages, np.float32)
+    page_rates = np.stack([
+        phase.page_rate() if n_groups > 1 else uniform_rate
+        for phase in phases
+    ])
+    return st, n_groups, assumed_p, fdp_rate, page_rates
+
+
 def simulate(
     geom: Geometry,
     mcfg: ManagerConfig,
@@ -100,40 +151,14 @@ def simulate(
     init_p_from_phase: bool = True,
 ) -> RunResult:
     """Run a (possibly multi-phase) workload under a manager preset."""
-    from repro.core.simulator import init_bloom
-
     rng = np.random.default_rng(seed)
-    first = phases[0]
-    n_groups = 1 if mcfg.max_groups == 1 else len(first.sizes)
-    page_group = (
-        np.zeros(geom.lba_pages, np.int32)
-        if n_groups == 1
-        else first.page_group()
+    st, n_groups, assumed_p, fdp_rate, page_rates = build_drive(
+        geom, mcfg, phases, init_p_from_phase=init_p_from_phase
     )
-    st = init_state(geom, mcfg, page_group, n_groups)
-    if mcfg.td_mode == "bloom":
-        ctx = SimContext(geom, mcfg, n_groups)
-        st = init_bloom(ctx, st)
-    if init_p_from_phase and n_groups > 1:
-        import jax.numpy as jnp
-
-        p0 = np.zeros(mcfg.max_groups, np.float32)
-        p0[: len(first.probs)] = first.probs
-        # convert aggregate probability → expected writes per interval scale
-        st = dict(st)
-        ctx0 = SimContext(geom, mcfg, n_groups)
-        st["grp_p"] = jnp.asarray(p0)
-    ctx = SimContext(geom, mcfg, n_groups)
-
-    assumed_p, fdp_rate = fdp_assumed_arrays(first, mcfg.max_groups)
+    ctx = SimContext(geom, mcfg, n_groups, use_bloom=mcfg.td_mode == "bloom")
     apps, migs = [], []
-    for phase in phases:
+    for phase, page_rate in zip(phases, page_rates):
         lbas = phase.sample(rng)
-        page_rate = (
-            phase.page_rate()
-            if n_groups > 1
-            else np.full(geom.lba_pages, 1.0 / geom.lba_pages, np.float32)
-        )
         st, trace = run(
             ctx, st, lbas,
             page_rate=page_rate, assumed_p=assumed_p, fdp_rate=fdp_rate,

@@ -12,6 +12,15 @@ One scan step = one application write:
 
 GC migrations re-enter the same write path (so migrated pages can be demoted
 by the detector, as in Listing 1/3 of the paper).
+
+Policy switches (allocation mode, GC policy, detector, movement/dynamic
+flags) are TRACED DATA — a per-drive ``policy`` pytree of scalars/vectors —
+selected with ``lax.cond``/``lax.switch`` instead of Python branches. Under
+plain jit the predicates stay runtime branches (no extra work on the
+single-drive path); under ``jax.vmap`` they lower to selects, which is what
+lets ``core/fleet.py`` batch drives with *different* manager configs into
+one jitted ``vmap(lax.scan)``. State is a flat dict of jnp arrays (a clean
+pytree), so the whole simulator jits, vmaps, checkpoints, and scans.
 """
 
 from __future__ import annotations
@@ -27,18 +36,41 @@ from repro.core.allocation import (
     allocate_by_size,
     allocate_closed_form,
 )
-from repro.core.ssd import CLOSED, FREE, OPEN, Geometry, ManagerConfig
+from repro.core.ssd import CLOSED, FREE, OPEN, Geometry, ManagerConfig, bloom_bits
 
 INT_MAX = jnp.iinfo(jnp.int32).max
+
+# policy codes (traced per-drive scalars; see policy_from_config)
+ALLOC_CLOSED, ALLOC_FDP, ALLOC_SIZE, ALLOC_FREQ = 0, 1, 2, 3
+_ALLOC_CODES = {
+    "wolf": ALLOC_CLOSED,
+    "optimal": ALLOC_CLOSED,
+    "fdp_assumed": ALLOC_FDP,
+    "size": ALLOC_SIZE,
+    "freq": ALLOC_FREQ,
+    "single": ALLOC_SIZE,
+}
+TD_STATIC, TD_FDP, TD_BLOOM = 0, 1, 2
+_TD_CODES = {"static": TD_STATIC, "fdp": TD_FDP, "bloom": TD_BLOOM}
 
 
 @dataclasses.dataclass(frozen=True)
 class SimContext:
-    """Static context threaded through the jitted step."""
+    """Static context threaded through the jitted step.
+
+    Holds the SHAPE-defining geometry and the scalar paper constants shared
+    by every drive of a fleet; everything that may differ per drive lives in
+    the traced ``policy`` pytree.
+    """
 
     geom: Geometry
     mcfg: ManagerConfig
     n_groups: int  # initial groups (may grow in dynamic mode)
+    # static because it gates array SHAPES and traced branches: when False
+    # the bloom detector branch is structurally absent (vmapped fleets then
+    # never pay per-step selects over the [G, bits] filter pair) and the
+    # state carries (G, 1) placeholders
+    use_bloom: bool = True
 
     @property
     def h(self) -> int:
@@ -47,6 +79,32 @@ class SimContext:
     @property
     def f_min_pages(self) -> int:
         return self.geom.n_luns * self.geom.pages_per_block
+
+
+def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
+    """Lower a ManagerConfig's policy switches to a traced pytree.
+
+    assumed_p/fdp_rate: [G] FDP fixed-assumption arrays (zeros if unused).
+    """
+    g_max = ctx.mcfg.max_groups
+    if assumed_p is None:
+        assumed_p = jnp.zeros(g_max, jnp.float32)
+    if fdp_rate is None:
+        fdp_rate = jnp.zeros(g_max, jnp.float32)
+    assert ctx.use_bloom or ctx.mcfg.td_mode != "bloom", (
+        "bloom detector requested but ctx.use_bloom is False"
+    )
+    return {
+        "alloc_mode": jnp.asarray(_ALLOC_CODES[ctx.mcfg.alloc_mode], jnp.int32),
+        "gc_lru": jnp.asarray(ctx.mcfg.gc_policy == "lru"),
+        "movement_ops": jnp.asarray(ctx.mcfg.movement_ops),
+        "td_mode": jnp.asarray(_TD_CODES[ctx.mcfg.td_mode], jnp.int32),
+        "dynamic_groups": jnp.asarray(ctx.mcfg.dynamic_groups),
+        "max_groups": jnp.asarray(ctx.mcfg.max_groups, jnp.int32),
+        "f_min_pages": jnp.asarray(ctx.f_min_pages, jnp.int32),
+        "assumed_p": jnp.asarray(assumed_p, jnp.float32),
+        "fdp_rate": jnp.asarray(fdp_rate, jnp.float32),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -73,9 +131,14 @@ def _pop_free_block(st, g):
     return st, blk, ok
 
 
-def _write_page(ctx: SimContext, st, lba, g, *, is_migration: bool):
-    """Append page `lba` to group g's active block (allocating if needed)."""
-    b = ctx.geom.pages_per_block  # noqa: shadows module-level nothing
+def _write_page(ctx: SimContext, st, lba, g, *, is_migration: bool, enabled=True):
+    """Append page `lba` to group g's active block (allocating if needed).
+
+    enabled: traced mask — when False every update is an elementwise no-op.
+    GC migration loops use this instead of wrapping the call in lax.cond,
+    which under vmap would select over the whole state pytree per page.
+    """
+    b = ctx.geom.pages_per_block
     blk = st["active_blk"][g]
     blk_full = jnp.where(blk >= 0, st["fill"][jnp.maximum(blk, 0)] >= b, True)
 
@@ -92,12 +155,12 @@ def _write_page(ctx: SimContext, st, lba, g, *, is_migration: bool):
         )
         return st
 
-    st = jax.lax.cond(blk_full, alloc, lambda s: dict(s), st)
+    st = jax.lax.cond(blk_full & enabled, alloc, lambda s: dict(s), st)
     blk = st["active_blk"][g]
     slot = st["fill"][blk]
     # overflow guard: if the pool was empty the active block may still be
     # full — drop the write and count it (tests assert this never fires).
-    ok = (blk >= 0) & (slot < b)
+    ok = enabled & (blk >= 0) & (slot < b)
     blk_c = jnp.maximum(blk, 0)
     slot_c = jnp.minimum(slot, b - 1)
     st = dict(st)
@@ -109,10 +172,18 @@ def _write_page(ctx: SimContext, st, lba, g, *, is_migration: bool):
         jnp.where(ok, True, st["valid"][blk_c, slot_c])
     )
     st["live"] = st["live"].at[blk_c].add(jnp.where(ok, 1, 0))
-    st["map_blk"] = st["map_blk"].at[lba].set(jnp.where(ok, blk, -1))
-    st["map_slot"] = st["map_slot"].at[lba].set(jnp.where(ok, slot, -1))
+    # a FAILED (enabled but not ok) write unmaps the page; a disabled call
+    # must leave the mapping untouched
+    st["map_blk"] = st["map_blk"].at[lba].set(
+        jnp.where(ok, blk, jnp.where(enabled, -1, st["map_blk"][lba]))
+    )
+    st["map_slot"] = st["map_slot"].at[lba].set(
+        jnp.where(ok, slot, jnp.where(enabled, -1, st["map_slot"][lba]))
+    )
     st["grp_size"] = st["grp_size"].at[g].add(jnp.where(ok, 1, 0))
-    st["n_dropped"] = st["n_dropped"] + jnp.where(ok, 0, 1)
+    st["n_dropped"] = st["n_dropped"] + jnp.where(
+        ok | jnp.logical_not(enabled), 0, 1
+    )
     if is_migration:
         st["n_mig"] = st["n_mig"] + jnp.where(ok, 1, 0)
     return st
@@ -139,27 +210,25 @@ def _invalidate(st, lba):
 # garbage collection (one victim) — §5.4
 # ---------------------------------------------------------------------------
 
-def _select_victim(ctx: SimContext, st, g):
+def _select_victim(ctx: SimContext, st, g, gc_lru):
     closed = (st["state"] == CLOSED) & (st["group_of"] == g)
-    if ctx.mcfg.gc_policy == "lru":
-        score = jnp.where(closed, st["stamp"], INT_MAX)
-    else:  # greedy
-        score = jnp.where(closed, st["live"], INT_MAX)
-    victim = jnp.argmin(score)
-    ok = closed[victim]
-    if ctx.mcfg.gc_policy == "greedy":
-        # a fully-live victim frees nothing: skip (movement-op no-op guard)
-        ok = ok & (st["live"][victim] < ctx.geom.pages_per_block)
+    score_lru = jnp.where(closed, st["stamp"], INT_MAX)
+    score_greedy = jnp.where(closed, st["live"], INT_MAX)
+    victim = jnp.argmin(jnp.where(gc_lru, score_lru, score_greedy))
+    # a fully-live greedy victim frees nothing: skip (movement-op no-op guard)
+    ok = closed[victim] & (
+        gc_lru | (st["live"][victim] < ctx.geom.pages_per_block)
+    )
     return victim, ok
 
 
-def _gc_one(ctx: SimContext, st, g, demote_fn):
+def _gc_one(ctx: SimContext, st, g, demote_fn, gc_lru):
     """GC one victim in group g; migrate live pages via the write path.
 
     demote_fn(st, lba, g) -> target group for a migrated page (§5.6 demotion:
     bloom/fdp detectors may demote during GC; static keeps g).
     """
-    victim, ok = _select_victim(ctx, st, g)
+    victim, ok = _select_victim(ctx, st, g, gc_lru)
     # migrations may need one fresh block beyond the active's free slots:
     # never start a GC with an empty pool (callers keep it ≥ 2).
     ok = ok & (jnp.sum(st["state"] == FREE) >= 1)
@@ -168,18 +237,25 @@ def _gc_one(ctx: SimContext, st, g, demote_fn):
         b = ctx.geom.pages_per_block
 
         def body(j, st):
+            # masked migration (no lax.cond: under vmap a per-slot cond
+            # would select over the whole state pytree 16×/GC)
             lba = st["slot_lba"][victim, j]
             is_live = st["valid"][victim, j]
-
-            def mig(st):
-                st = dict(st)
-                st["valid"] = st["valid"].at[victim, j].set(False)
-                st["live"] = st["live"].at[victim].add(-1)
-                g_tgt = demote_fn(st, lba, g)
-                st["grp_size"] = st["grp_size"].at[g].add(-1)
-                return _write_page(ctx, st, lba, g_tgt, is_migration=True)
-
-            return jax.lax.cond(is_live, mig, lambda s: dict(s), st)
+            lba_c = jnp.maximum(lba, 0)  # dead slots hold -1
+            st = dict(st)
+            st["valid"] = st["valid"].at[victim, j].set(
+                jnp.where(is_live, False, st["valid"][victim, j])
+            )
+            st["live"] = st["live"].at[victim].add(
+                jnp.where(is_live, -1, 0)
+            )
+            g_tgt = demote_fn(st, lba_c, g)  # pure read of st
+            st["grp_size"] = st["grp_size"].at[g].add(
+                jnp.where(is_live, -1, 0)
+            )
+            return _write_page(
+                ctx, st, lba_c, g_tgt, is_migration=True, enabled=is_live
+            )
 
         st = jax.lax.fori_loop(0, b, body, dict(st))
         # erase
@@ -202,16 +278,16 @@ def _gc_one(ctx: SimContext, st, g, demote_fn):
 # over-provisioning allocation (interval) — §5.5
 # ---------------------------------------------------------------------------
 
-def _recompute_alloc(ctx: SimContext, st, assumed_p=None):
+def _recompute_alloc(ctx: SimContext, st, policy):
     geom, mcfg = ctx.geom, ctx.mcfg
     b = geom.pages_per_block
     active = st["grp_active"]
     s = jnp.where(active, st["grp_size"].astype(jnp.float32), 0.0)
     s = jnp.maximum(s, jnp.where(active, 1.0, 0.0))
-    if mcfg.alloc_mode == "fdp_assumed":
-        p = jnp.where(active, assumed_p, 0.0)
-    else:
-        p = jnp.where(active, st["grp_p"], 0.0)
+    use_assumed = policy["alloc_mode"] == ALLOC_FDP
+    p = jnp.where(
+        active, jnp.where(use_assumed, policy["assumed_p"], st["grp_p"]), 0.0
+    )
     p = p / jnp.maximum(p.sum(), 1e-9)
     # usable OP = spare pages beyond logical content, minus the GC reserve
     # and one block per active group (absorbs the per-group ceil slack so
@@ -223,19 +299,17 @@ def _recompute_alloc(ctx: SimContext, st, assumed_p=None):
         - s.sum()
     )
 
-    if mcfg.alloc_mode in ("wolf", "fdp_assumed", "optimal"):
-        op = allocate_closed_form(
-            s, p, op_total,
-            cold_rule=True,
-            cold_hit_rate_frac=mcfg.cold_hit_rate_frac,
-            cold_op_frac=mcfg.cold_op_frac,
-        )
-    elif mcfg.alloc_mode == "size":
-        op = allocate_by_size(s, op_total)
-    elif mcfg.alloc_mode == "freq":
-        op = allocate_by_frequency(p, op_total)
-    else:  # single group / no reallocation
-        op = allocate_by_size(s, op_total)
+    op_closed = allocate_closed_form(
+        s, p, op_total,
+        cold_rule=True,
+        cold_hit_rate_frac=mcfg.cold_hit_rate_frac,
+        cold_op_frac=mcfg.cold_op_frac,
+    )
+    op_size = allocate_by_size(s, op_total)
+    op_freq = allocate_by_frequency(p, op_total)
+    is_closed = (policy["alloc_mode"] == ALLOC_CLOSED) | use_assumed
+    is_freq = policy["alloc_mode"] == ALLOC_FREQ
+    op = jnp.where(is_closed, op_closed, jnp.where(is_freq, op_freq, op_size))
     alloc_blocks = jnp.ceil((s + op) / b).astype(jnp.int32)
     alloc_blocks = jnp.where(active, jnp.maximum(alloc_blocks, 1), 0)
     st = dict(st)
@@ -243,7 +317,7 @@ def _recompute_alloc(ctx: SimContext, st, assumed_p=None):
     return st
 
 
-def _interval_update(ctx: SimContext, st, assumed_p):
+def _interval_update(ctx: SimContext, st, policy):
     mcfg = ctx.mcfg
     st = dict(st)
     u = st["grp_writes"].astype(jnp.float32) / ctx.h
@@ -254,9 +328,8 @@ def _interval_update(ctx: SimContext, st, assumed_p):
     st["grp_writes"] = jnp.zeros_like(st["grp_writes"])
     st["interval"] = st["interval"] + 1
     st["cooldown"] = jnp.maximum(st["cooldown"] - 1, 0)
-    if mcfg.dynamic_groups:
-        st = _maybe_create_or_merge(ctx, st)
-    st = _recompute_alloc(ctx, st, assumed_p)
+    st = _maybe_create_or_merge(ctx, st, policy)
+    st = _recompute_alloc(ctx, st, policy)
     return st
 
 
@@ -270,20 +343,23 @@ def _hit_rates(st):
     return jnp.where(st["grp_active"], hr, -1.0)
 
 
-def _maybe_create_or_merge(ctx: SimContext, st):
+def _maybe_create_or_merge(ctx: SimContext, st, policy):
     mcfg = ctx.mcfg
+    dynamic = policy["dynamic_groups"]
+    f_min = policy["f_min_pages"]
     hr = _hit_rates(st)
     order = jnp.argsort(-hr)  # hottest first
     hottest, second = order[0], order[1]
     n_active = st["grp_active"].sum()
-    can_slot = n_active < mcfg.max_groups
+    can_slot = n_active < policy["max_groups"]
     hot_ratio = hr[hottest] / jnp.maximum(hr[second], 1e-12)
     create = (
-        can_slot
+        dynamic
+        & can_slot
         & (st["cooldown"] == 0)
         & (n_active >= 2)
         & (hot_ratio >= mcfg.q_create)
-        & (st["grp_size"][hottest] >= ctx.f_min_pages)
+        & (st["grp_size"][hottest] >= f_min)
     )
 
     def do_create(st):
@@ -311,12 +387,12 @@ def _maybe_create_or_merge(ctx: SimContext, st):
     ratio = hr_sorted / jnp.maximum(jnp.roll(hr_sorted, -1), 1e-12)
     converged = valid_pair & (ratio < 1.3) & (hr_sorted > 0)
     tiny = valid_pair & (
-        st["grp_size"][order] < jnp.asarray(ctx.f_min_pages, jnp.int32)
+        st["grp_size"][order] < f_min
     ) & (jnp.roll(hr_sorted, -1) > 0)
     mergeable = converged | tiny
     pair_i = jnp.argmax(mergeable)
     do_merge = (
-        mergeable[pair_i] & (st["cooldown"] == 0) & (n_active > 2)
+        dynamic & mergeable[pair_i] & (st["cooldown"] == 0) & (n_active > 2)
     )
 
     def merge(st):
@@ -367,45 +443,64 @@ def _sgv_neighbors(st):
     return neighbor
 
 
-def _target_group_app(ctx: SimContext, st, lba, cur_g, page_rate, bloom):
+def _target_group_app(ctx: SimContext, st, lba, cur_g, policy, rate_fn):
     """Target group for an application update of `lba` living in cur_g."""
-    mode = ctx.mcfg.td_mode
-    if mode == "static":
-        return st, cur_g
-    neighbor = _sgv_neighbors(st)
-    if mode == "fdp":
+    cur_g = jnp.asarray(cur_g, jnp.int32)
+
+    def static_br(st):
+        return dict(st), cur_g
+
+    def fdp_br(st):
         # fixed assumed per-page rate bands: promote if ≥2× the group's
         # assumed rate (paper §5/§6: FDP's fixed-order assumption)
-        assumed = bloom["fdp_rate"]  # [G] assumed per-page rate
-        r = page_rate[lba]
-        promote = r > 2.0 * assumed[cur_g]
-        return st, jnp.where(promote, neighbor(cur_g, -1), cur_g)
-    # bloom (§5.6): in both filters → promote
-    st, in_both = _bloom_update(ctx, st, lba, cur_g)
-    return st, jnp.where(in_both, _sgv_neighbors(st)(cur_g, -1), cur_g)
+        neighbor = _sgv_neighbors(st)
+        r = rate_fn(st, lba)
+        promote = r > 2.0 * policy["fdp_rate"][cur_g]
+        g = jnp.where(promote, neighbor(cur_g, -1), cur_g)
+        return dict(st), g.astype(jnp.int32)
+
+    def bloom_br(st):
+        # bloom (§5.6): in both filters → promote
+        st, in_both = _bloom_update(ctx, st, lba, cur_g)
+        g = jnp.where(in_both, _sgv_neighbors(st)(cur_g, -1), cur_g)
+        return st, g.astype(jnp.int32)
+
+    branches = [static_br, fdp_br]
+    if ctx.use_bloom:
+        branches.append(bloom_br)
+    return jax.lax.switch(policy["td_mode"], branches, dict(st))
 
 
-def _target_group_gc(ctx: SimContext, st, lba, cur_g, page_rate, bloom):
-    mode = ctx.mcfg.td_mode
-    if mode == "static":
+def _target_group_gc(ctx: SimContext, st, lba, cur_g, policy, rate_fn):
+    cur_g = jnp.asarray(cur_g, jnp.int32)
+
+    def static_br(st):
         return cur_g
-    neighbor = _sgv_neighbors(st)
-    if mode == "fdp":
-        assumed = bloom["fdp_rate"]
-        r = page_rate[lba]
-        demote = r < 0.5 * assumed[cur_g]
-        return jnp.where(demote, neighbor(cur_g, +1), cur_g)
-    # bloom: in neither filter during a migration → demote
-    in_active = _bloom_query(ctx, st["bloom_active"], lba, cur_g)
-    in_passive = _bloom_query(ctx, st["bloom_passive"], lba, cur_g)
-    return jnp.where(~in_active & ~in_passive, neighbor(cur_g, +1), cur_g)
+
+    def fdp_br(st):
+        neighbor = _sgv_neighbors(st)
+        r = rate_fn(st, lba)
+        demote = r < 0.5 * policy["fdp_rate"][cur_g]
+        return jnp.where(demote, neighbor(cur_g, +1), cur_g).astype(jnp.int32)
+
+    def bloom_br(st):
+        # bloom: in neither filter during a migration → demote
+        neighbor = _sgv_neighbors(st)
+        in_active = _bloom_query(ctx, st["bloom_active"], lba, cur_g)
+        in_passive = _bloom_query(ctx, st["bloom_passive"], lba, cur_g)
+        g = jnp.where(~in_active & ~in_passive, neighbor(cur_g, +1), cur_g)
+        return g.astype(jnp.int32)
+
+    branches = [static_br, fdp_br]
+    if ctx.use_bloom:
+        branches.append(bloom_br)
+    return jax.lax.switch(policy["td_mode"], branches, dict(st))
 
 
 # -- bloom filter pair (per group) ------------------------------------------
 
 def _bloom_hashes(ctx: SimContext, lba):
-    bits = ctx.geom.lba_pages * ctx.mcfg.bloom_bits_per_page // ctx.mcfg.max_groups
-    bits = max(bits, 64)
+    bits = bloom_bits(ctx.geom, ctx.mcfg)
     u = lba.astype(jnp.uint32)
     h1 = (u * jnp.uint32(2654435761)) % jnp.uint32(bits)
     h2 = (u * jnp.uint32(40503) + jnp.uint32(99991)) % jnp.uint32(bits)
@@ -429,15 +524,18 @@ def _bloom_update(ctx: SimContext, st, lba, g):
     )
     st["bloom_writes"] = st["bloom_writes"].at[g].add(1)
     rotate = st["bloom_writes"][g] >= jnp.maximum(st["grp_size"][g], 64)
-
-    def do_rotate(st):
-        st = dict(st)
-        st["bloom_passive"] = st["bloom_passive"].at[g].set(st["bloom_active"][g])
-        st["bloom_active"] = st["bloom_active"].at[g].set(False)
-        st["bloom_writes"] = st["bloom_writes"].at[g].set(0)
-        return st
-
-    st = jax.lax.cond(rotate, do_rotate, lambda s: dict(s), st)
+    # row-masked rotation (no lax.cond: under vmap a cond would select over
+    # the full [G, bits] filter pair every step; this touches one row)
+    row_active = st["bloom_active"][g]
+    st["bloom_passive"] = st["bloom_passive"].at[g].set(
+        jnp.where(rotate, row_active, st["bloom_passive"][g])
+    )
+    st["bloom_active"] = st["bloom_active"].at[g].set(
+        jnp.where(rotate, False, row_active)
+    )
+    st["bloom_writes"] = st["bloom_writes"].at[g].set(
+        jnp.where(rotate, 0, st["bloom_writes"][g])
+    )
     return st, in_active & in_passive
 
 
@@ -445,20 +543,31 @@ def _bloom_update(ctx: SimContext, st, lba, g):
 # the step + runner
 # ---------------------------------------------------------------------------
 
-def make_step(ctx: SimContext, assumed_p, fdp_rate, page_rate):
-    """Build the per-write scan step. assumed_p/fdp_rate: [G] policy arrays
-    (FDP's fixed assumptions); page_rate: [LBA] true per-page update rates
-    (oracle detector input). All may be traced values."""
+def make_step(ctx: SimContext, policy, rate_fn):
+    """Build the per-write scan step.
+
+    policy: traced pytree from :func:`policy_from_config` (per-drive under
+    vmap). rate_fn(st, lba, t) -> true per-page update rate of `lba` at
+    global write index t (oracle detector input; phase-aware in fleets).
+    Scan input = (lba, t); t is the global application-write index, which is
+    deliberately NOT taken from batched state so the interval predicate
+    stays a scalar under vmap (the expensive §5.1 bookkeeping then lowers
+    to a real branch taken every h steps, not a per-step select).
+    """
     geom, mcfg = ctx.geom, ctx.mcfg
     b = geom.pages_per_block
-    bloom_ctx = {"fdp_rate": fdp_rate}
 
-    def demote_fn(st, lba, g):
-        return _target_group_gc(ctx, st, lba, g, page_rate, bloom_ctx)
+    def step(st, xs):
+        lba, t = xs
 
-    def step(st, lba):
+        def lookup(s, l):
+            return rate_fn(s, l, t)
+
+        def demote_fn(s, l, g):
+            return _target_group_gc(ctx, s, l, g, policy, lookup)
+
         st, old_g = _invalidate(st, lba)
-        st, g = _target_group_app(ctx, st, lba, old_g, page_rate, bloom_ctx)
+        st, g = _target_group_app(ctx, st, lba, old_g, policy, lookup)
         g = jnp.where(st["grp_active"][g], g, old_g)
 
         # GC when the group needs a new block it is not entitled to, or the
@@ -472,7 +581,10 @@ def make_step(ctx: SimContext, assumed_p, fdp_rate, page_rate):
         low_pool = free_blocks <= mcfg.gc_reserve_blocks
         do_gc = needs_block & (over_budget | low_pool)
         st = jax.lax.cond(
-            do_gc, lambda s: _gc_one(ctx, s, g, demote_fn), lambda s: dict(s), st
+            do_gc,
+            lambda s: _gc_one(ctx, s, g, demote_fn, policy["gc_lru"]),
+            lambda s: dict(s),
+            st,
         )
 
         # emergency valve: if the pool is (nearly) empty, greedily reclaim
@@ -489,10 +601,10 @@ def make_step(ctx: SimContext, assumed_p, fdp_rate, page_rate):
             score = jnp.where(closed, s["live"], INT_MAX)
             victim = jnp.argmin(score)
             g_v = jnp.maximum(s["group_of"][victim], 0)
-            greedy_ctx = dataclasses.replace(
-                ctx, mcfg=dataclasses.replace(ctx.mcfg, gc_policy="greedy")
+            return (
+                _gc_one(ctx, s, g_v, demote_fn, jnp.asarray(False)),
+                tries + 1,
             )
-            return _gc_one(greedy_ctx, s, g_v, demote_fn), tries + 1
 
         st, _ = jax.lax.while_loop(needs_air, reclaim, (st, 0))
 
@@ -502,24 +614,25 @@ def make_step(ctx: SimContext, assumed_p, fdp_rate, page_rate):
 
         # movement operations (§5.3): one compaction GC per step on the most
         # surplus group, donating the redeemed block to the pool.
-        if mcfg.movement_ops:
-            surplus = jnp.where(
-                st["grp_active"], st["grp_phys"] - st["grp_alloc"], -INT_MAX
-            )
-            g_s = jnp.argmax(surplus)
-            pool_ok = jnp.sum(st["state"] == FREE) >= 2  # migration headroom
-            st = jax.lax.cond(
-                (surplus[g_s] >= 1) & pool_ok,
-                lambda s: _gc_one(ctx, s, g_s, demote_fn),
-                lambda s: dict(s),
-                st,
-            )
+        surplus = jnp.where(
+            st["grp_active"], st["grp_phys"] - st["grp_alloc"], -INT_MAX
+        )
+        g_s = jnp.argmax(surplus)
+        pool_ok = jnp.sum(st["state"] == FREE) >= 2  # migration headroom
+        st = jax.lax.cond(
+            policy["movement_ops"] & (surplus[g_s] >= 1) & pool_ok,
+            lambda s: _gc_one(ctx, s, g_s, demote_fn, policy["gc_lru"]),
+            lambda s: dict(s),
+            st,
+        )
 
-        # interval completion (§5.1)
-        is_interval = (st["n_app"] % ctx.h) == 0
+        # interval completion (§5.1); t+1 == n_app after this write, so the
+        # predicate is exactly the pre-refactor (n_app % h == 0) — but as a
+        # scalar, shared by every drive of a vmapped fleet.
+        is_interval = ((t + 1) % ctx.h) == 0
         st = jax.lax.cond(
             is_interval,
-            lambda s: _interval_update(ctx, s, assumed_p),
+            lambda s: _interval_update(ctx, s, policy),
             lambda s: dict(s),
             st,
         )
@@ -529,9 +642,13 @@ def make_step(ctx: SimContext, assumed_p, fdp_rate, page_rate):
 
 
 @functools.partial(jax.jit, static_argnames=("ctx",))
-def _run_jit(ctx: SimContext, st, lbas, page_rate, assumed_p, fdp_rate):
-    step = make_step(ctx, assumed_p, fdp_rate, page_rate)
-    return jax.lax.scan(step, st, lbas)
+def _run_jit(ctx: SimContext, st, lbas, page_rate, policy):
+    def rate_fn(s, lba, t):
+        return page_rate[lba]
+
+    step = make_step(ctx, policy, rate_fn)
+    ts = st["n_app"] + jnp.arange(lbas.shape[0], dtype=jnp.int32)
+    return jax.lax.scan(step, st, (lbas, ts))
 
 
 def run(ctx: SimContext, st, lbas, *, page_rate=None, assumed_p=None, fdp_rate=None):
@@ -543,33 +660,12 @@ def run(ctx: SimContext, st, lbas, *, page_rate=None, assumed_p=None, fdp_rate=N
     calling run() repeatedly with updated oracle arrays.
     """
     lbas = jnp.asarray(lbas, jnp.int32)
-    g_max = ctx.mcfg.max_groups
     if page_rate is None:
         page_rate = jnp.zeros(ctx.geom.lba_pages, jnp.float32)
-    assumed_p = (
-        jnp.zeros(g_max, jnp.float32)
-        if assumed_p is None
-        else jnp.asarray(assumed_p, jnp.float32)
-    )
-    fdp_rate = (
-        jnp.zeros(g_max, jnp.float32)
-        if fdp_rate is None
-        else jnp.asarray(fdp_rate, jnp.float32)
-    )
+    policy = policy_from_config(ctx, assumed_p, fdp_rate)
     st, (app, mig) = _run_jit(
-        ctx, st, lbas, jnp.asarray(page_rate, jnp.float32), assumed_p, fdp_rate
+        ctx, st, lbas, jnp.asarray(page_rate, jnp.float32), policy
     )
     return st, {"app": app, "mig": mig}
 
 
-def init_bloom(ctx: SimContext, st):
-    """Size the per-group bloom filter pair (only needed for td_mode=bloom)."""
-    bits = max(
-        64,
-        ctx.geom.lba_pages * ctx.mcfg.bloom_bits_per_page // ctx.mcfg.max_groups,
-    )
-    g_max = ctx.mcfg.max_groups
-    st = dict(st)
-    st["bloom_active"] = jnp.zeros((g_max, bits), bool)
-    st["bloom_passive"] = jnp.zeros((g_max, bits), bool)
-    return st

@@ -76,7 +76,20 @@ class ManagerConfig:
     bloom_bits_per_page: int = 4
 
 
-def init_state(geom: Geometry, mcfg: ManagerConfig, page_group, n_groups: int):
+def bloom_bits(geom: Geometry, mcfg: ManagerConfig) -> int:
+    """Bits per group-filter for the §5.6 bloom detector pair."""
+    return max(
+        64, geom.lba_pages * mcfg.bloom_bits_per_page // mcfg.max_groups
+    )
+
+
+def init_state(
+    geom: Geometry,
+    mcfg: ManagerConfig,
+    page_group,
+    n_groups: int,
+    use_bloom: bool = True,
+):
     """Build a pre-conditioned (fully mapped) drive.
 
     page_group: int array [LBA] — initial group of every logical page.
@@ -159,9 +172,14 @@ def init_state(geom: Geometry, mcfg: ManagerConfig, page_group, n_groups: int):
         "grp_alloc": jnp.asarray(np.maximum(grp_phys, 1)),
         "grp_active": jnp.asarray(grp_active),
         "grp_created": jnp.zeros(g_max, jnp.int32),
-        # detector (bloom)
-        "bloom_active": jnp.zeros((g_max, 1), bool),  # resized by simulator
-        "bloom_passive": jnp.zeros((g_max, 1), bool),
+        # detector (bloom); (G, 1) placeholder when the context excludes the
+        # bloom branch (SimContext.use_bloom=False)
+        "bloom_active": jnp.zeros(
+            (g_max, bloom_bits(geom, mcfg) if use_bloom else 1), bool
+        ),
+        "bloom_passive": jnp.zeros(
+            (g_max, bloom_bits(geom, mcfg) if use_bloom else 1), bool
+        ),
         "bloom_writes": jnp.zeros(g_max, jnp.int32),
         # counters
         "n_app": jnp.zeros((), jnp.int32),

@@ -40,6 +40,72 @@ class Phase:
         return (offsets[groups] + within).astype(np.int32)
 
 
+# ---------------------------------------------------------------------------
+# JAX-native sampling (on-device, inside the jitted fleet region)
+# ---------------------------------------------------------------------------
+
+def phase_param_arrays(phases, *, g_max: int | None = None, p_max: int | None = None):
+    """Pad a phase sequence to fixed-shape arrays for on-device sampling.
+
+    Returns a dict of numpy arrays: probs/sizes/offsets [P, G] (zero-padded),
+    counts [P] (writes per phase; padded phases get 0 and are never reached),
+    n_groups [P]. Drives of a fleet pad to shared (p_max, g_max) so their
+    parameter pytrees stack.
+    """
+    p_n = p_max or len(phases)
+    g_n = g_max or max(len(ph.sizes) for ph in phases)
+    assert len(phases) <= p_n
+    probs = np.zeros((p_n, g_n), np.float32)
+    sizes = np.zeros((p_n, g_n), np.int32)
+    offsets = np.zeros((p_n, g_n), np.int32)
+    counts = np.zeros(p_n, np.int32)
+    n_groups = np.ones(p_n, np.int32)
+    for i, ph in enumerate(phases):
+        k = len(ph.sizes)
+        probs[i, :k] = ph.probs
+        sizes[i, :k] = ph.sizes
+        offsets[i, :k] = np.concatenate([[0], np.cumsum(ph.sizes)])[:-1]
+        counts[i] = ph.n_writes
+        n_groups[i] = k
+    return {
+        "probs": probs, "sizes": sizes, "offsets": offsets,
+        "counts": counts, "n_groups": n_groups,
+    }
+
+
+def sample_phases_device(key, params: dict, n_total: int):
+    """Draw the [n_total] write stream of a phase sequence on device.
+
+    Mirrors :meth:`Phase.sample` (group ~ Categorical(p), page ~ Uniform
+    within group) with jax.random instead of a NumPy Generator — same
+    distribution, different stream. Jit-safe: ``n_total`` is static, phase
+    boundaries come from ``params["counts"]``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    counts = jnp.asarray(params["counts"], jnp.int32)
+    probs = jnp.asarray(params["probs"], jnp.float32)
+    sizes = jnp.asarray(params["sizes"], jnp.int32)
+    offsets = jnp.asarray(params["offsets"], jnp.int32)
+    n_groups = jnp.asarray(params["n_groups"], jnp.int32)
+
+    t = jnp.arange(n_total, dtype=jnp.int32)
+    ph = jnp.searchsorted(jnp.cumsum(counts), t, side="right")
+    ph = jnp.minimum(ph, counts.shape[0] - 1)
+    k_grp, k_page = jax.random.split(key)
+    u_grp = jax.random.uniform(k_grp, (n_total,))
+    u_page = jax.random.uniform(k_page, (n_total,))
+    cdf = jnp.cumsum(probs, axis=1)  # [P, G]
+    g = jnp.sum(u_grp[:, None] >= cdf[ph], axis=1).astype(jnp.int32)
+    g = jnp.minimum(g, n_groups[ph] - 1)  # float-roundoff tail guard
+    size = sizes[ph, g]
+    within = jnp.minimum(
+        (u_page * size.astype(jnp.float32)).astype(jnp.int32), size - 1
+    )
+    return (offsets[ph, g] + within).astype(jnp.int32)
+
+
 def split_sizes(lba: int, fracs) -> tuple[int, ...]:
     fracs = np.asarray(fracs, np.float64)
     fracs = fracs / fracs.sum()

@@ -1,0 +1,24 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+0.4.x only ships the former). Kernels must not care which one the installed
+jaxlib exposes, so they route every ``compiler_params=`` through here.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params struct under either JAX naming."""
+    if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - ancient jaxlib
+        raise RuntimeError(
+            "installed jax.experimental.pallas.tpu exposes neither "
+            "CompilerParams nor TPUCompilerParams"
+        )
+    return _COMPILER_PARAMS_CLS(**kwargs)

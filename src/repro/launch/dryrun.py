@@ -36,7 +36,7 @@ from repro.models.registry import ALL_ARCHS, get_config, get_model  # noqa: E402
 from repro.sharding.auto import auto_shardings, batch_shardings, cache_shardings  # noqa: E402
 from repro.sharding.rules import use_sharding_rules  # noqa: E402
 from repro.train.train_loop import TrainConfig, make_train_step, train_state_specs  # noqa: E402
-from repro.utils.hlo import analyze_hlo  # noqa: E402
+from repro.utils.hlo import analyze_hlo, xla_cost_analysis  # noqa: E402
 from repro.utils.roofline import HBM_BW, Roofline, memory_floor_bytes, model_flops  # noqa: E402
 
 REPORT_DIR = pathlib.Path("reports/dryrun")
@@ -65,8 +65,6 @@ def count_params(params_shapes, cfg) -> dict:
 def _cost_value(cost, key):
     if cost is None:
         return 0.0
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0] if cost else {}
     try:
         return float(cost.get(key, 0.0))
     except Exception:
@@ -231,7 +229,7 @@ def run_cell(
     # would be undercounted 10–200×; kept below as a cross-reference.)
     hlo_text = compiled.as_text()
     analysis = analyze_hlo(hlo_text)
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     rl = Roofline(
         flops_dev=analysis["flops"],
         hbm_bytes_dev=analysis["bytes"],

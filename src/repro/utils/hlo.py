@@ -404,6 +404,19 @@ class HloModule:
         return self.comp_cost(entry)
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jaxlib versions.
+
+    Older jaxlib returns a flat ``{property: value}`` dict; newer jaxlib
+    returns a list with one such dict per executable. Always hand back a
+    single dict (empty when XLA reports nothing) so callers can ``.get``.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def analyze_hlo(text: str) -> dict:
     mod = HloModule(text)
     cost = mod.entry_cost()

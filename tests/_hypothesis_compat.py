@@ -1,0 +1,191 @@
+"""Minimal offline stand-in for ``hypothesis`` (property-based testing).
+
+The test container has no network, so ``pip install hypothesis`` is not an
+option. This shim implements the tiny slice of the hypothesis API the suite
+uses — ``given``, ``settings``, and the ``integers`` / ``floats`` /
+``booleans`` / ``sampled_from`` strategies — backed by seeded deterministic
+draws (seed = hash of the test's qualname + example index), so failures are
+reproducible run to run. There is no shrinking and no adaptive search; this
+trades hypothesis's guided exploration for a fixed quasi-random sweep of
+``max_examples`` points, which is what the suite's @settings budgets assume.
+
+``conftest.py`` installs this module under ``sys.modules["hypothesis"]``
+only when the real package is not importable — prefer real hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, label: str):
+        self._draw_fn = draw_fn
+        self.label = label
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+    def __repr__(self):
+        return f"SearchStrategy({self.label})"
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 15) if min_value is None else int(min_value)
+    hi = (2 ** 15) if max_value is None else int(max_value)
+    return SearchStrategy(
+        lambda rng: int(rng.integers(lo, hi + 1)), f"integers({lo}, {hi})"
+    )
+
+
+def floats(
+    min_value=None,
+    max_value=None,
+    allow_nan=False,
+    allow_infinity=False,
+    width=64,
+) -> SearchStrategy:
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(lo, hi)), f"floats({lo}, {hi})"
+    )
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(len(elements)))],
+        f"sampled_from(<{len(elements)}>)",
+    )
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, "just")
+
+
+def one_of(*strategies) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: strategies[int(rng.integers(len(strategies)))].draw(rng),
+        "one_of",
+    )
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.draw(rng) for s in strategies), "tuples"
+    )
+
+
+def lists(elements, min_size=0, max_size=8) -> SearchStrategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw, "lists")
+
+
+class settings:
+    """Decorator recording the per-test example budget (deadline ignored)."""
+
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._hyp_settings = self
+        return fn
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    all = classmethod(lambda cls: [])
+
+
+def assume(condition) -> bool:
+    """Degraded assume: skip the example by raising a private marker."""
+    if not condition:
+        raise _AssumptionFailed
+    return True
+
+
+class _AssumptionFailed(Exception):
+    pass
+
+
+def _base_seed(qualname: str) -> int:
+    digest = hashlib.sha256(qualname.encode()).digest()
+    return int.from_bytes(digest[:8], "big") % (2 ** 63)
+
+
+def given(*strategies, **kw_strategies):
+    def decorate(fn):
+        inherited = getattr(fn, "_hyp_settings", None)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_hyp_settings", None) or inherited
+            n = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            seed0 = _base_seed(fn.__qualname__)
+            for i in range(n):
+                rng = np.random.default_rng((seed0 + i) % (2 ** 63))
+                drawn = [s.draw(rng) for s in strategies]
+                kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **kw)
+                except _AssumptionFailed:
+                    continue
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={drawn} kwargs={kw}"
+                    ) from exc
+            return None
+
+        # pytest resolves fixture names from the signature; strip the
+        # strategy-bound (rightmost positional + keyword) parameters so it
+        # does not try to inject them as fixtures.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[: len(params) - len(strategies)] if strategies else params
+        keep = [p for p in keep if p.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        if inherited is not None:
+            wrapper._hyp_settings = inherited
+        return wrapper
+
+    return decorate
+
+
+def install():
+    """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.__version__ = "0.0.offline-shim"
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers", "floats", "booleans", "sampled_from", "just", "one_of",
+        "tuples", "lists", "SearchStrategy",
+    ):
+        setattr(strat, name, globals()[name])
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat
+    return hyp

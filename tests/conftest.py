@@ -1,0 +1,18 @@
+"""Suite-wide wiring: offline hypothesis fallback.
+
+The container has no network access; when the real ``hypothesis`` package is
+absent, install the deterministic shim from ``_hypothesis_compat`` before
+any test module runs ``from hypothesis import ...``.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+try:
+    import hypothesis  # noqa: F401  (prefer the real package)
+except ImportError:
+    import _hypothesis_compat
+
+    _hypothesis_compat.install()

@@ -10,6 +10,10 @@ from repro.configs.base import ShapeConfig
 from repro.models import attention
 from repro.models.registry import get_config, get_model, smoke_config
 
+# whole-model Pallas-vs-XLA comparisons (interpret mode) are multi-minute in
+# aggregate: tier-1, but out of the fast lane (scripts/run_tests.sh --fast)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(autouse=True)
 def _restore_impl():

@@ -1,0 +1,173 @@
+"""Fleet runner tests: the vmapped batch must agree elementwise with
+per-drive ``managers.simulate`` loops, and the JAX-native on-device sampler
+must match the NumPy ``Phase.sample`` distribution."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.fleet import DriveSpec, simulate_fleet
+from repro.core.ssd import Geometry
+
+GEOM = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8, lba_pba=0.7)
+N_WRITES = 12_000
+
+
+def _grid_specs(lba, n):
+    return [
+        DriveSpec(M.wolf(), (W.two_modal(lba, n),), seed=1),
+        DriveSpec(M.fdp(), (W.two_modal(lba, n),), seed=2),
+        DriveSpec(M.single_group(), (W.uniform(lba, n),), seed=3),
+        DriveSpec(M.wolf_lru(), (W.tpcc_like(lba, n),), seed=4),
+        DriveSpec(M.wolf(), tuple(W.swap_phases(lba, n // 2)), seed=5),
+        # bloom drive: exercises the bloom sub-batch (filter width must
+        # match the standalone run — padding is per-partition)
+        DriveSpec(M.wolf_dynamic(), (W.tpcc_like(lba, n),), seed=6),
+    ]
+
+
+class TestFleetEquivalence:
+    @pytest.fixture(scope="class")
+    def fleet_and_refs(self):
+        specs = _grid_specs(GEOM.lba_pages, N_WRITES)
+        fleet = simulate_fleet(GEOM, specs, sampler="numpy")
+        refs = [
+            M.simulate(GEOM, s.mcfg, list(s.phases), seed=s.seed)
+            for s in specs
+        ]
+        return specs, fleet, refs
+
+    def test_traces_elementwise_identical(self, fleet_and_refs):
+        specs, fleet, refs = fleet_and_refs
+        for i, (s, ref) in enumerate(zip(specs, refs)):
+            np.testing.assert_array_equal(
+                fleet.app[i], ref.app, err_msg=f"app trace diverged: {s.label}"
+            )
+            np.testing.assert_array_equal(
+                fleet.mig[i], ref.mig, err_msg=f"mig trace diverged: {s.label}"
+            )
+
+    def test_final_states_elementwise_identical(self, fleet_and_refs):
+        specs, fleet, refs = fleet_and_refs
+        for i, (s, ref) in enumerate(zip(specs, refs)):
+            for key, ref_arr in ref.state.items():
+                got = np.asarray(fleet.state(i)[key])
+                ref_arr = np.asarray(ref_arr)
+                if ref_arr.shape != got.shape:
+                    # per-group arrays are padded from the drive's own cap
+                    # to its sub-batch's g_max; the pad must stay inactive
+                    g = s.mcfg.max_groups
+                    assert got.shape[0] >= g, (s.label, key)
+                    if key.startswith("bloom_") and key != "bloom_writes":
+                        # filter bit-width scales with 1/max_groups — shapes
+                        # are incomparable; a non-bloom drive leaves both
+                        # untouched (all-False)
+                        assert not got.any() and not ref_arr.any(), (
+                            s.label, key,
+                        )
+                        continue
+                    if key == "grp_active":
+                        assert not got[g:].any(), (s.label, key)
+                    got = got[:g]
+                np.testing.assert_array_equal(
+                    got, ref_arr, err_msg=f"{s.label}: state[{key}] diverged"
+                )
+
+    def test_wa_matches_per_drive(self, fleet_and_refs):
+        specs, fleet, refs = fleet_and_refs
+        for i, ref in enumerate(refs):
+            assert fleet.wa_total[i] == pytest.approx(ref.wa_total, abs=0)
+            np.testing.assert_array_equal(
+                fleet.result(i).wa_curve(2000), ref.wa_curve(2000)
+            )
+
+    def test_mixed_group_caps_stack(self):
+        """wolf_dynamic (12 group slots) and single (1) share one vmap."""
+        lba, n = GEOM.lba_pages, 6_000
+        specs = [
+            DriveSpec(M.wolf_dynamic(), (W.tpcc_like(lba, n),), seed=0),
+            DriveSpec(M.single_group(), (W.two_modal(lba, n),), seed=0),
+        ]
+        fleet = simulate_fleet(GEOM, specs, sampler="numpy")
+        for i, s in enumerate(specs):
+            ref = M.simulate(GEOM, s.mcfg, list(s.phases), seed=s.seed)
+            np.testing.assert_array_equal(fleet.app[i], ref.app)
+            np.testing.assert_array_equal(fleet.mig[i], ref.mig)
+        # the single-group drive must actually behave single-group
+        grp_active = np.asarray(fleet.state(1)["grp_active"])
+        assert grp_active.sum() == 1
+
+    def test_jax_sampler_runs_and_preserves_invariants(self):
+        specs = _grid_specs(GEOM.lba_pages, 6_000)
+        fleet = simulate_fleet(GEOM, specs, sampler="jax")
+        assert np.all(fleet.wa_total >= 1.0)
+        for i in range(len(specs)):
+            state = fleet.state(i)
+            assert int(state["n_dropped"]) == 0
+            live = np.asarray(state["live"])
+            assert live.sum() == GEOM.lba_pages, "live-page conservation"
+            valid = np.asarray(state["valid"])
+            np.testing.assert_array_equal(valid.sum(1), live)
+
+
+class TestDeviceSampler:
+    def _chi_square(self, counts, expected):
+        counts = np.asarray(counts, np.float64)
+        expected = np.asarray(expected, np.float64)
+        keep = expected > 0
+        return float(
+            np.sum((counts[keep] - expected[keep]) ** 2 / expected[keep])
+        )
+
+    def test_group_distribution_matches_numpy_sample(self):
+        """Per-group write counts: chi-square of the device stream against
+        the phase probabilities stays within the same band as NumPy's."""
+        lba, n = 20_000, 120_000
+        phase = W.tpcc_like(lba, n)
+        params = W.phase_param_arrays([phase])
+        lbas_dev = np.asarray(
+            W.sample_phases_device(jax.random.PRNGKey(0), params, n)
+        )
+        lbas_np = phase.sample(np.random.default_rng(0))
+        edges = np.concatenate([[0], np.cumsum(phase.sizes)])
+        expected = np.asarray(phase.probs) * n
+        chi_dev = self._chi_square(
+            np.histogram(lbas_dev, bins=edges)[0], expected
+        )
+        chi_np = self._chi_square(
+            np.histogram(lbas_np, bins=edges)[0], expected
+        )
+        # 99.9th percentile of chi2(df=2) ≈ 13.8; both samplers must sit
+        # inside it, i.e. device sampling is as faithful as host sampling
+        assert chi_dev < 13.8, (chi_dev, chi_np)
+        assert chi_np < 13.8, (chi_dev, chi_np)
+
+    def test_within_group_uniformity(self):
+        lba, n = 8_000, 200_000
+        phase = W.two_modal(lba, n, p_hot=0.5, frac_hot=0.5)
+        params = W.phase_param_arrays([phase])
+        lbas = np.asarray(
+            W.sample_phases_device(jax.random.PRNGKey(7), params, n)
+        )
+        assert lbas.min() >= 0 and lbas.max() < lba
+        # chi-square over 16 sub-bins of the hot group vs uniform
+        hot = lbas[lbas >= phase.sizes[0]] - phase.sizes[0]
+        counts, _ = np.histogram(hot, bins=16, range=(0, phase.sizes[1]))
+        chi = self._chi_square(counts, np.full(16, len(hot) / 16))
+        assert chi < 37.7  # 99.9th percentile of chi2(df=15)
+
+    def test_phase_boundaries_respected(self):
+        lba = 6_000
+        ph1, ph2 = W.swap_phases(lba, 5_000)
+        params = W.phase_param_arrays([ph1, ph2])
+        lbas = np.asarray(
+            W.sample_phases_device(jax.random.PRNGKey(3), params, 10_000)
+        )
+        half = lba // 2
+        # phase 1 writes 90% to the upper half, phase 2 mirrors it
+        frac_hi_1 = (lbas[:5_000] >= half).mean()
+        frac_hi_2 = (lbas[5_000:] >= half).mean()
+        assert frac_hi_1 == pytest.approx(0.9, abs=0.02)
+        assert frac_hi_2 == pytest.approx(0.1, abs=0.02)

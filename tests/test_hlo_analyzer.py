@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.utils.hlo import analyze_hlo, collective_stats
+from repro.utils.hlo import analyze_hlo, collective_stats, xla_cost_analysis
 
 
 def _compile(fn, *specs):
@@ -39,7 +39,7 @@ class TestFlops:
             jax.ShapeDtypeStruct((256, 32), jnp.float32),
         )
         res = analyze_hlo(compiled.as_text())
-        cost = compiled.cost_analysis()
+        cost = xla_cost_analysis(compiled)
         xla_flops = float(cost.get("flops", 0.0))
         if xla_flops > 0:
             assert res["flops"] == pytest.approx(xla_flops, rel=0.05)
@@ -65,7 +65,7 @@ class TestFlops:
             res["flops"], expected,
         )
         # XLA's own analysis counts the body ONCE — the whole point:
-        xla_flops = float(compiled.cost_analysis().get("flops", 0.0))
+        xla_flops = float(xla_cost_analysis(compiled).get("flops", 0.0))
         if xla_flops > 0:
             assert xla_flops < expected / (n_steps / 2)
 

@@ -12,6 +12,10 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.kernels.flash_attention.kernel import flash_attention
+
+# interpret-mode shape/dtype sweeps take minutes in aggregate: keep them in
+# tier-1 but out of the fast lane (scripts/run_tests.sh --fast)
+pytestmark = pytest.mark.slow
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.gc_compact.kernel import gc_compact
 from repro.kernels.gc_compact.ref import gc_compact_ref
