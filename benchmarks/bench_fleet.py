@@ -9,6 +9,12 @@ The speedup is hardware-dependent: XLA:CPU executes batched gather/scatter
 serially per lane, so on CPU the vmap win comes from pmap sharding across
 cores (virtual host devices, set up below) and dispatch amortization; on an
 accelerator backend the same code batches the lanes in silicon.
+
+Every run emits ``BENCH_fleet.json`` at the repo root (schema
+``bench_fleet/v1``): steps/sec for the batched fleet and per policy ×
+workload cell (loop path), so the perf trajectory is tracked PR-over-PR.
+``--smoke`` runs a reduced grid for the CI lane
+(``scripts/run_tests.sh --bench-smoke``).
 """
 
 from __future__ import annotations
@@ -23,7 +29,8 @@ if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "
         + f" --xla_force_host_platform_device_count={os.cpu_count()}"
     )
 
-import numpy as np
+import json
+import pathlib
 
 from repro.core import managers as M
 from repro.core import workloads as W
@@ -58,10 +65,10 @@ def grid_specs(geom: Geometry, writes: int, seeds=(0,)) -> list[DriveSpec]:
     ]
 
 
-def run(full: bool = False) -> dict:
+def run(full: bool = False, smoke: bool = False) -> dict:
     geom = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8)
-    writes = 60_000 if full else 20_000
-    seeds = (0, 1)  # 4 policies × 4 workloads × 2 seeds = 32 drives
+    writes = 60_000 if full else (4_000 if smoke else 20_000)
+    seeds = (0,) if smoke else (0, 1)  # 4 policies × 4 workloads × seeds
     specs = grid_specs(geom, writes, seeds)
 
     # -- fleet path: warm the jit cache, then time steady-state ------------
@@ -69,26 +76,36 @@ def run(full: bool = False) -> dict:
     with timer() as t_fleet:
         fleet = simulate_fleet(geom, specs, sampler="jax", devices="auto")
 
-    # -- loop path: same grid, per-drive managers.simulate ------------------
-    # warm each (manager, phase-count) jit signature once at tiny scale so
-    # the timed loop measures runtime, not XLA compilation
+    # -- loop path: same grid, per-drive managers.simulate, timed per drive
+    # (per policy×workload cell steps/sec). Warm each (manager, phase-count)
+    # jit signature once at tiny scale so the timed loop measures runtime,
+    # not XLA compilation.
     for s in {(s.mcfg.name, len(s.phases)): s for s in specs}.values():
         warm = [W.uniform(geom.lba_pages, 64) for _ in s.phases]
         M.simulate(geom, s.mcfg, warm, seed=0)
+    loop_results, drive_secs = [], []
     with timer() as t_loop:
-        loop_results = [
-            M.simulate(geom, s.mcfg, list(s.phases), seed=s.seed)
-            for s in specs
-        ]
+        for s in specs:
+            with timer() as t_drive:
+                loop_results.append(
+                    M.simulate(geom, s.mcfg, list(s.phases), seed=s.seed)
+                )
+            drive_secs.append(t_drive.dt)
 
     b = len(specs)
     fleet_dps = b / t_fleet.dt
     loop_dps = b / t_loop.dt
     speedup = fleet_dps / loop_dps
 
-    window = writes // 10
+    window = max(writes // 10, 500)
     rows = []
+    cells: dict[str, dict] = {}
     for i, s in enumerate(specs):
+        cell = s.name.rsplit("#", 1)[0]  # "policy/workload"
+        c = cells.setdefault(cell, {"sec": 0.0, "n": 0, "wa": []})
+        c["sec"] += drive_secs[i]
+        c["n"] += 1
+        c["wa"].append(float(fleet.wa_total[i]))
         if s.seed != seeds[0]:
             continue
         curve = fleet.result(i).wa_curve(window)
@@ -107,6 +124,8 @@ def run(full: bool = False) -> dict:
         "loop_sec": round(t_loop.dt, 3),
         "fleet_drives_per_sec": round(fleet_dps, 3),
         "loop_drives_per_sec": round(loop_dps, 3),
+        "fleet_steps_per_sec": round(b * writes / t_fleet.dt, 1),
+        "loop_steps_per_sec": round(b * writes / t_loop.dt, 1),
         "speedup": round(speedup, 2),
     }
     out = {
@@ -118,10 +137,39 @@ def run(full: bool = False) -> dict:
         },
     }
     report("fleet", out)
+
+    # machine-readable perf trajectory, tracked from this PR onward
+    bench = {
+        "schema": "bench_fleet/v1",
+        "mode": "smoke" if smoke else ("full" if full else "default"),
+        "config": {
+            "drives": b, "writes_per_drive": writes,
+            "geometry": {
+                "n_luns": geom.n_luns, "blocks_per_lun": geom.blocks_per_lun,
+                "pages_per_block": geom.pages_per_block,
+                "lba_pba": geom.lba_pba,
+            },
+            "host_devices": os.cpu_count(),
+        },
+        "fleet_steps_per_sec": summary["fleet_steps_per_sec"],
+        "loop_steps_per_sec": summary["loop_steps_per_sec"],
+        "speedup": summary["speedup"],
+        "cells": {
+            name: {
+                "steps_per_sec_loop": round(c["n"] * writes / c["sec"], 1),
+                "wa_total_mean": round(sum(c["wa"]) / c["n"], 4),
+            }
+            for name, c in sorted(cells.items())
+        },
+    }
+    bench_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
+    bench_path.write_text(json.dumps(bench, indent=2))
+    print(f"\nwrote {bench_path}")
     print(
-        f"\nfleet: {b} drives × {writes} writes in {t_fleet.dt:.2f}s "
-        f"({fleet_dps:.2f} drives/s) | loop: {t_loop.dt:.2f}s "
-        f"({loop_dps:.2f} drives/s) | speedup ×{speedup:.1f}"
+        f"fleet: {b} drives × {writes} writes in {t_fleet.dt:.2f}s "
+        f"({fleet_dps:.2f} drives/s, {summary['fleet_steps_per_sec']:.0f} steps/s) | "
+        f"loop: {t_loop.dt:.2f}s ({loop_dps:.2f} drives/s) | "
+        f"speedup ×{speedup:.1f}"
     )
     return out
 
@@ -129,4 +177,4 @@ def run(full: bool = False) -> dict:
 if __name__ == "__main__":
     import sys
 
-    run(full="--full" in sys.argv)
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

@@ -4,7 +4,10 @@ The batched analogue of examples/ssd_experiment.py: instead of looping
 ``managers.simulate`` over configurations, every (manager, workload, seed)
 combination becomes a drive of a single jitted vmap(lax.scan) — write
 streams are sampled on device, and the grid's WA landscape comes back in
-one call.
+one call. Alongside each simulated WA the closed-form model prediction
+(paper eq. 3/5, evaluated at the drive's final operating point) is
+reported with its relative error — model-vs-simulation across the whole
+grid in one pass.
 
     PYTHONPATH=src python examples/fleet_sweep.py --writes 20000 --seeds 2
 """
@@ -47,11 +50,18 @@ def main():
 
     print(f"{len(specs)} drives × {args.writes} writes "
           f"(geometry: {geom.n_blocks} blocks, LBA/PBA {geom.lba_pba})\n")
+    window = max(args.writes // 10, 1000)
+    predicted = fleet.predicted_wa()
+    rel_err = fleet.model_error(window=window, pred=predicted)
     width = max(len(s.name) for s in specs)
     for i, s in enumerate(specs):
-        curve = fleet.result(i).wa_curve(max(args.writes // 10, 1000))
+        curve = fleet.result(i).wa_curve(window)
         print(f"{s.name.ljust(width)}  WA_total={fleet.wa_total[i]:6.3f}  "
-              f"WA_eq={np.mean(curve[-3:]):6.3f}")
+              f"WA_eq={np.mean(curve[-3:]):6.3f}  "
+              f"WA_model={predicted[i]:6.3f}  err={rel_err[i]:+7.1%}")
+    print(f"\nmodel vs simulation (eq. 3/5) across the grid: "
+          f"mean |rel err| = {np.mean(np.abs(rel_err)):.1%}, "
+          f"worst = {np.max(np.abs(rel_err)):.1%}")
     # the paper's bottom line, read off the grid: wolf ≤ fdp per workload
     for wn, _ in workloads:
         wa = {

@@ -1,13 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 test entry point.
 #
-#   scripts/run_tests.sh          # full suite
-#   scripts/run_tests.sh --fast   # skip @pytest.mark.slow (multi-minute kernel sweeps)
+#   scripts/run_tests.sh                # full suite
+#   scripts/run_tests.sh --fast         # skip @pytest.mark.slow (multi-minute kernel sweeps)
+#   scripts/run_tests.sh --bench-smoke  # reduced fleet benchmark → BENCH_fleet.json
 #   scripts/run_tests.sh <pytest args...>   # passed through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    # perf-trajectory lane: a small policy×workload grid through both the
+    # batched fleet and the per-drive loop, emitting BENCH_fleet.json
+    # (steps/sec per cell) for PR-over-PR comparison
+    export PYTHONPATH=".:${PYTHONPATH}"
+    exec python benchmarks/bench_fleet.py --smoke
+fi
 
 args=()
 if [[ "${1:-}" == "--fast" ]]; then

@@ -3,9 +3,10 @@
 Where ``managers.simulate`` runs ONE drive per Python call, a fleet stacks
 the per-drive state pytrees and runs every drive lock-step through the same
 compiled write-step — per-drive differences (workload, seed, FDP assumption
-arrays, allocation / GC / detector / movement policy, group-count caps) are
-traced data, so wolf, wolf-dynamic, fdp and single-group drives batch into
-one ``vmap``. This is the substrate for exploring policy × workload grids
+arrays, allocation / GC / detector / movement policy, group-count caps, and
+the §5.1 constants ``ewma_a`` / interval length) are traced data, so wolf,
+wolf-dynamic, fdp and single-group drives — and EWMA/interval sweeps — batch
+into one ``vmap``. This is the substrate for exploring policy × workload grids
 ("as many scenarios as you can imagine"): per-drive write streams are drawn
 on device by ``workloads.sample_phases_device`` inside the jitted region, so
 host work is O(B) setup, not O(B·T) sampling.
@@ -39,13 +40,15 @@ import numpy as np
 
 from repro.core.managers import RunResult, build_drive
 from repro.core.simulator import SimContext, make_step, policy_from_config
-from repro.core.ssd import Geometry, ManagerConfig
+from repro.core.ssd import Geometry, ManagerConfig, SimState
 from repro.core.workloads import Phase, phase_param_arrays, sample_phases_device
 
 # ManagerConfig fields that must agree fleet-wide: they are baked into the
 # shared static SimContext (paper constants), not per-drive policy data.
+# interval_frac and ewma_a are NOT here: the §5.1 constants ride in the
+# traced per-drive policy pytree, so fleets can sweep them in one batch.
 _SHARED_FIELDS = (
-    "interval_frac", "ewma_a", "q_create", "w_intervals",
+    "q_create", "w_intervals",
     "cold_hit_rate_frac", "cold_op_frac", "gc_reserve_blocks",
     "bloom_bits_per_page",
 )
@@ -70,11 +73,12 @@ class FleetResult:
     app: np.ndarray  # [B, T] cumulative application writes
     mig: np.ndarray  # [B, T] cumulative migrations
     specs: list[DriveSpec]
-    # (original drive indices, stacked final-state pytree) per sub-batch
-    shards: list[tuple[list[int], dict]]
+    # (original drive indices, stacked SimState pytree) per sub-batch
+    shards: list[tuple[list[int], SimState]]
     lbas: np.ndarray | None = None  # [B, T] when return_lbas=True
+    geom: Geometry | None = None  # shared fleet geometry (analytics)
 
-    def state(self, i: int) -> dict:
+    def state(self, i: int) -> SimState:
         """Final state pytree of drive i."""
         for idx, states in self.shards:
             if i in idx:
@@ -83,7 +87,7 @@ class FleetResult:
         raise IndexError(i)
 
     @property
-    def states(self) -> dict:
+    def states(self) -> SimState:
         """Stacked state pytree — only for single-shard (unpartitioned)
         fleets; mixed bloom/non-bloom fleets must use .state(i)."""
         assert len(self.shards) == 1, "mixed fleet: use .state(i)"
@@ -105,6 +109,58 @@ class FleetResult:
         return np.stack(
             [self.result(i).wa_curve(window) for i in range(len(self.specs))]
         )
+
+    # -- closed-form analytics (paper eq. 3/5) ------------------------------
+
+    def predicted_wa(self) -> np.ndarray:
+        """[B] closed-form model WA per drive at its final operating point.
+
+        Each active group is treated as a uniform sub-SSD of logical size
+        ``grp_size`` with over-provisioning ``grp_alloc·B − grp_size``, so
+        its δ solves eq. 4 (≡ eq. 3 per group); the drive prediction is the
+        frequency-weighted sum of the per-group WAs (eq. 5), weighted by
+        the measured EWMA frequencies. A single-group drive degenerates to
+        the plain eq. 3 equilibrium model.
+        """
+        from repro.core.allocation import total_wa
+
+        assert self.geom is not None, "fleet built without geometry"
+        b = self.geom.pages_per_block
+        out = np.zeros(len(self.specs))
+        for i in range(len(self.specs)):
+            st = self.state(i)
+            active = np.asarray(st["grp_active"])
+            s = np.asarray(st["grp_size"], np.float64)
+            op_x = np.asarray(st["grp_alloc"], np.float64) * b - s
+            p = np.where(active, np.asarray(st["grp_p"], np.float64), 0.0)
+            if p.sum() <= 0.0:  # no interval completed yet: weight by size
+                p = np.where(active, s, 0.0)
+            p = p / max(p.sum(), 1e-12)
+            s_safe = np.where(active & (s > 0), s, 1.0)
+            out[i] = float(
+                total_wa(
+                    jnp.asarray(s_safe, jnp.float32),
+                    jnp.asarray(p, jnp.float32),
+                    jnp.asarray(np.maximum(op_x, 0.0), jnp.float32),
+                )
+            )
+        return out
+
+    def model_error(self, window: int = 2000, tail: int = 3,
+                    pred: np.ndarray | None = None) -> np.ndarray:
+        """[B] relative error of the eq. 3/5 prediction vs the simulated
+        equilibrium WA (mean of the last ``tail`` windows per drive).
+
+        pred: pass a precomputed :meth:`predicted_wa` to avoid running the
+        per-drive closed-form pass twice.
+        """
+        if pred is None:
+            pred = self.predicted_wa()
+        measured = np.array([
+            float(np.mean(self.result(i).wa_curve(window)[-tail:]))
+            for i in range(len(self.specs))
+        ])
+        return (pred - measured) / np.maximum(measured, 1e-12)
 
 
 def _stack(trees):
@@ -161,6 +217,7 @@ def simulate_fleet(
     init_p_from_phase: bool = True,
     return_lbas: bool = False,
     devices: int | str | None = None,
+    gc_impl: str = "bulk",
 ) -> FleetResult:
     """Run B independent drives in a single jitted vmap(lax.scan).
 
@@ -172,6 +229,10 @@ def simulate_fleet(
     devices: None/1 = pure single-device vmap; "auto" = shard over all
     jax.devices(); int = shard over that many. Shard count is clamped to a
     divisor of each sub-batch size.
+
+    gc_impl: GC drain implementation ("bulk" | "reference"), threaded to
+    SimContext — the bulk-vs-reference equivalence suite runs whole fleets
+    under both.
 
     Every spec must issue the same total number of writes (one shared scan).
     """
@@ -216,6 +277,12 @@ def simulate_fleet(
         # 1/max_groups, so padding a bloom drive beyond its sub-batch's own
         # cap would change its hashes vs the standalone managers.simulate
         g_max = max(s.mcfg.max_groups for s in sub)
+        # per-drive interval lengths force the traced-h predicate (per-step
+        # selects of the §5.1 machinery under vmap); homogeneous sub-batches
+        # keep the scalar fast path
+        per_drive_interval = (
+            len({s.mcfg.interval_frac for s in sub}) > 1
+        )
         sts, policies, page_rates, params, streams = [], [], [], [], []
         n_groups_max = 1
         for s in sub:
@@ -261,9 +328,16 @@ def simulate_fleet(
 
         ctx = SimContext(
             geom,
-            dataclasses.replace(base, name="fleet", max_groups=g_max),
+            # the shared ctx keeps the SUB-BATCH's interval_frac so ctx.h
+            # (the scalar predicate) is exact on the homogeneous fast path
+            dataclasses.replace(
+                base, name="fleet", max_groups=g_max,
+                interval_frac=sub[0].mcfg.interval_frac,
+            ),
             n_groups_max,
             use_bloom=use_bloom,
+            gc_impl=gc_impl,
+            per_drive_interval=per_drive_interval,
         )
         args = (
             _stack(sts),
@@ -292,4 +366,5 @@ def simulate_fleet(
 
     return FleetResult(
         app=app, mig=mig, specs=list(specs), shards=shards, lbas=lbas_out,
+        geom=geom,
     )

@@ -131,8 +131,7 @@ def build_drive(
     if init_p_from_phase and n_groups > 1:
         p0 = np.zeros(g_max, np.float32)
         p0[: len(first.probs)] = first.probs
-        st = dict(st)
-        st["grp_p"] = jnp.asarray(p0)
+        st = st.replace(grp_p=jnp.asarray(p0))
     assumed_p, fdp_rate = fdp_assumed_arrays(first, g_max)
     uniform_rate = np.full(geom.lba_pages, 1.0 / geom.lba_pages, np.float32)
     page_rates = np.stack([
@@ -149,13 +148,21 @@ def simulate(
     *,
     seed: int = 0,
     init_p_from_phase: bool = True,
+    gc_impl: str = "bulk",
 ) -> RunResult:
-    """Run a (possibly multi-phase) workload under a manager preset."""
+    """Run a (possibly multi-phase) workload under a manager preset.
+
+    gc_impl: "bulk" (vectorized drain, default) or "reference" (the
+    per-page oracle) — tests/test_bulk_gc.py asserts they agree.
+    """
     rng = np.random.default_rng(seed)
     st, n_groups, assumed_p, fdp_rate, page_rates = build_drive(
         geom, mcfg, phases, init_p_from_phase=init_p_from_phase
     )
-    ctx = SimContext(geom, mcfg, n_groups, use_bloom=mcfg.td_mode == "bloom")
+    ctx = SimContext(
+        geom, mcfg, n_groups, use_bloom=mcfg.td_mode == "bloom",
+        gc_impl=gc_impl,
+    )
     apps, migs = [], []
     for phase, page_rate in zip(phases, page_rates):
         lbas = phase.sample(rng)

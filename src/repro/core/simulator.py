@@ -1,7 +1,8 @@
 """Write-granularity SSD simulator (jittable, lax.scan over writes).
 
 One scan step = one application write:
-  1. invalidate the page's old physical slot,
+  1. invalidate the page's old physical slot (one gather in the packed
+     ``page_map``),
   2. pick the target group (temperature detection, §5.6 / oracle),
   3. garbage-collect inside the group if it's out of budgeted space (§5.4),
   4. append the page to the group's active block,
@@ -10,17 +11,49 @@ One scan step = one application write:
   6. movement operations (§5.3): ≤1 proactive compaction GC per step on the
      most block-surplus group, donating redeemed blocks to the pool.
 
-GC migrations re-enter the same write path (so migrated pages can be demoted
-by the detector, as in Listing 1/3 of the paper).
+Architecture (post bulk-GC refactor):
 
-Policy switches (allocation mode, GC policy, detector, movement/dynamic
-flags) are TRACED DATA — a per-drive ``policy`` pytree of scalars/vectors —
-selected with ``lax.cond``/``lax.switch`` instead of Python branches. Under
-plain jit the predicates stay runtime branches (no extra work on the
-single-drive path); under ``jax.vmap`` they lower to selects, which is what
-lets ``core/fleet.py`` batch drives with *different* manager configs into
-one jitted ``vmap(lax.scan)``. State is a flat dict of jnp arrays (a clean
-pytree), so the whole simulator jits, vmaps, checkpoints, and scans.
+* **State** is a :class:`repro.core.ssd.SimState` — a frozen dataclass
+  registered as a JAX pytree. Mutating helpers return successors via
+  ``st.replace(...)``; there are no ad-hoc ``dict(st)`` copies. The
+  logical→physical map is ONE packed int32 array (``page_map = blk · B +
+  slot``, ``-1`` unmapped): lookups, invalidates, and writes each cost a
+  single gather/scatter instead of the former ``map_blk``/``map_slot`` pair.
+
+* **GC drains in bulk.** :func:`_gc_drain_bulk` migrates a victim's live
+  pages in one shot: the ``[B]`` ``slot_lba``/``valid`` lanes are read at
+  once, per-slot target groups come from the demotion policy, pages are
+  segment-counted per target group, fresh blocks are claimed up front (one
+  per overflowing target group, in the exact order the sequential pop would
+  produce), and the landings are chunked writes — dense one-hot masked ops
+  for the group/block-sized updates (XLA:CPU expands vector-index ``.at[]``
+  scatters into a while loop each, measured at ~4× the whole drain's cost)
+  and flat 1-D scatters for the two capacity-sized ones. The slot-content
+  copy itself routes through ``kernels/gc_compact`` (Pallas-backed on TPU,
+  the flattened-index lowering elsewhere). Only the *demotion
+  decision* keeps a sequential flavor: §5.6 demotion reads hit rates, which
+  drift as the drain moves pages, so when any page is demotion-flagged a
+  ``lax.scan`` carrying just the [G] group sizes replays the per-page
+  decisions bit-exactly (sort-free; the common static-detector case
+  short-circuits to constant targets). No ``fori_loop`` over victim slots
+  remains; the former per-page path survives as
+  :func:`_gc_drain_reference` (``SimContext.gc_impl="reference"``) and is
+  asserted elementwise-identical in tests/test_bulk_gc.py.
+
+* **Policy switches are traced data.** Allocation mode, GC policy, detector,
+  movement/dynamic flags — and, since this refactor, the §5.1 constants
+  ``ewma_a`` and the interval length ``h`` — live in a per-drive ``policy``
+  pytree of scalars/vectors selected with ``lax.cond``/``lax.switch``. Under
+  plain jit the predicates stay runtime branches; under ``jax.vmap`` they
+  lower to selects, which is what lets ``core/fleet.py`` batch drives with
+  *different* manager configs (now including EWMA/interval sweeps) into one
+  jitted ``vmap(lax.scan)``. When every drive of a fleet shares ``h``, the
+  interval predicate stays a scalar (``SimContext.per_drive_interval=False``)
+  so the §5.1 bookkeeping remains a real every-h-steps branch, not a
+  per-step select.
+
+GC migrations re-enter the same write semantics (so migrated pages can be
+demoted by the detector, as in Listing 1/3 of the paper).
 """
 
 from __future__ import annotations
@@ -36,7 +69,16 @@ from repro.core.allocation import (
     allocate_by_size,
     allocate_closed_form,
 )
-from repro.core.ssd import CLOSED, FREE, OPEN, Geometry, ManagerConfig, bloom_bits
+from repro.core.ssd import (
+    CLOSED,
+    FREE,
+    OPEN,
+    Geometry,
+    ManagerConfig,
+    SimState,
+    bloom_bits,
+)
+from repro.kernels.gc_compact.ops import compact_slots
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -71,6 +113,15 @@ class SimContext:
     # never pay per-step selects over the [G, bits] filter pair) and the
     # state carries (G, 1) placeholders
     use_bloom: bool = True
+    # GC drain implementation: "bulk" (vectorized, default) or "reference"
+    # (the per-page fori_loop it replaced — kept as the equivalence oracle)
+    gc_impl: str = "bulk"
+    # static because it gates the interval predicate's batching: False keeps
+    # ((t+1) % h == 0) a SCALAR under vmap (every drive shares h, the §5.1
+    # work stays a real branch); True reads the per-drive policy["h"], which
+    # under vmap turns the interval machinery into per-step selects — only
+    # fleets actually sweeping the interval length pay that
+    per_drive_interval: bool = False
 
     @property
     def h(self) -> int:
@@ -102,6 +153,11 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
         "dynamic_groups": jnp.asarray(ctx.mcfg.dynamic_groups),
         "max_groups": jnp.asarray(ctx.mcfg.max_groups, jnp.int32),
         "f_min_pages": jnp.asarray(ctx.f_min_pages, jnp.int32),
+        # §5.1 constants as per-drive sweep axes (ROADMAP: online frequency
+        # re-estimation); h doubles as the interval predicate when
+        # ctx.per_drive_interval is True
+        "h": jnp.asarray(ctx.h, jnp.int32),
+        "ewma_a": jnp.asarray(ctx.mcfg.ewma_a, jnp.float32),
         "assumed_p": jnp.asarray(assumed_p, jnp.float32),
         "fdp_rate": jnp.asarray(fdp_rate, jnp.float32),
     }
@@ -111,97 +167,98 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
 # primitive state updates
 # ---------------------------------------------------------------------------
 
-def _pop_free_block(st, g):
+def _pop_free_block(st: SimState, g):
     """Claim a FREE block for group g (becomes its OPEN active block)."""
-    free_mask = st["state"] == FREE
+    free_mask = st.state == FREE
     blk = jnp.argmax(free_mask)  # reserve logic upstream guarantees ≥1
     ok = free_mask[blk]
-    st = dict(st)
-    st["state"] = st["state"].at[blk].set(jnp.where(ok, OPEN, st["state"][blk]))
-    st["group_of"] = st["group_of"].at[blk].set(
-        jnp.where(ok, g, st["group_of"][blk])
+    st = st.replace(
+        state=st.state.at[blk].set(jnp.where(ok, OPEN, st.state[blk])),
+        group_of=st.group_of.at[blk].set(jnp.where(ok, g, st.group_of[blk])),
+        fill=st.fill.at[blk].set(jnp.where(ok, 0, st.fill[blk])),
+        grp_phys=st.grp_phys.at[g].add(jnp.where(ok, 1, 0)),
+        # LRU clock: a block's age is its claim time — "least recently
+        # erased" degenerates into cleaning freshly-filled (never-erased)
+        # blocks if ages only advance on erase.
+        stamp=st.stamp.at[blk].set(jnp.where(ok, st.clock, st.stamp[blk])),
+        clock=st.clock + jnp.where(ok, 1, 0),
     )
-    st["fill"] = st["fill"].at[blk].set(jnp.where(ok, 0, st["fill"][blk]))
-    st["grp_phys"] = st["grp_phys"].at[g].add(jnp.where(ok, 1, 0))
-    # LRU clock: a block's age is its claim time — "least recently erased"
-    # degenerates into cleaning freshly-filled (never-erased) blocks if ages
-    # only advance on erase.
-    st["stamp"] = st["stamp"].at[blk].set(jnp.where(ok, st["clock"], st["stamp"][blk]))
-    st["clock"] = st["clock"] + jnp.where(ok, 1, 0)
     return st, blk, ok
 
 
-def _write_page(ctx: SimContext, st, lba, g, *, is_migration: bool, enabled=True):
+def _write_page(ctx: SimContext, st: SimState, lba, g, *, is_migration: bool,
+                enabled=True):
     """Append page `lba` to group g's active block (allocating if needed).
 
     enabled: traced mask — when False every update is an elementwise no-op.
-    GC migration loops use this instead of wrapping the call in lax.cond,
-    which under vmap would select over the whole state pytree per page.
+    The reference GC drain uses this instead of wrapping the call in
+    lax.cond, which under vmap would select over the whole state pytree per
+    page.
     """
     b = ctx.geom.pages_per_block
-    blk = st["active_blk"][g]
-    blk_full = jnp.where(blk >= 0, st["fill"][jnp.maximum(blk, 0)] >= b, True)
+    blk = st.active_blk[g]
+    blk_full = jnp.where(blk >= 0, st.fill[jnp.maximum(blk, 0)] >= b, True)
 
     def alloc(st):
-        st = dict(st)
-        old = st["active_blk"][g]
+        old = st.active_blk[g]
         # seal the previous active block
-        st["state"] = st["state"].at[jnp.maximum(old, 0)].set(
-            jnp.where(old >= 0, CLOSED, st["state"][jnp.maximum(old, 0)])
+        st = st.replace(
+            state=st.state.at[jnp.maximum(old, 0)].set(
+                jnp.where(old >= 0, CLOSED, st.state[jnp.maximum(old, 0)])
+            )
         )
         st, new_blk, ok = _pop_free_block(st, g)
-        st["active_blk"] = st["active_blk"].at[g].set(
-            jnp.where(ok, new_blk, old)
+        return st.replace(
+            active_blk=st.active_blk.at[g].set(jnp.where(ok, new_blk, old))
         )
-        return st
 
-    st = jax.lax.cond(blk_full & enabled, alloc, lambda s: dict(s), st)
-    blk = st["active_blk"][g]
-    slot = st["fill"][blk]
+    st = jax.lax.cond(blk_full & enabled, alloc, lambda s: s, st)
+    blk = st.active_blk[g]
+    slot = st.fill[blk]
     # overflow guard: if the pool was empty the active block may still be
     # full — drop the write and count it (tests assert this never fires).
     ok = enabled & (blk >= 0) & (slot < b)
     blk_c = jnp.maximum(blk, 0)
     slot_c = jnp.minimum(slot, b - 1)
-    st = dict(st)
-    st["fill"] = st["fill"].at[blk_c].add(jnp.where(ok, 1, 0))
-    st["slot_lba"] = st["slot_lba"].at[blk_c, slot_c].set(
-        jnp.where(ok, lba, st["slot_lba"][blk_c, slot_c])
-    )
-    st["valid"] = st["valid"].at[blk_c, slot_c].set(
-        jnp.where(ok, True, st["valid"][blk_c, slot_c])
-    )
-    st["live"] = st["live"].at[blk_c].add(jnp.where(ok, 1, 0))
-    # a FAILED (enabled but not ok) write unmaps the page; a disabled call
-    # must leave the mapping untouched
-    st["map_blk"] = st["map_blk"].at[lba].set(
-        jnp.where(ok, blk, jnp.where(enabled, -1, st["map_blk"][lba]))
-    )
-    st["map_slot"] = st["map_slot"].at[lba].set(
-        jnp.where(ok, slot, jnp.where(enabled, -1, st["map_slot"][lba]))
-    )
-    st["grp_size"] = st["grp_size"].at[g].add(jnp.where(ok, 1, 0))
-    st["n_dropped"] = st["n_dropped"] + jnp.where(
-        ok | jnp.logical_not(enabled), 0, 1
+    updates = dict(
+        fill=st.fill.at[blk_c].add(jnp.where(ok, 1, 0)),
+        slot_lba=st.slot_lba.at[blk_c, slot_c].set(
+            jnp.where(ok, lba, st.slot_lba[blk_c, slot_c])
+        ),
+        valid=st.valid.at[blk_c, slot_c].set(
+            jnp.where(ok, True, st.valid[blk_c, slot_c])
+        ),
+        live=st.live.at[blk_c].add(jnp.where(ok, 1, 0)),
+        # a FAILED (enabled but not ok) write unmaps the page; a disabled
+        # call must leave the mapping untouched
+        page_map=st.page_map.at[lba].set(
+            jnp.where(ok, blk * b + slot,
+                      jnp.where(enabled, -1, st.page_map[lba]))
+        ),
+        grp_size=st.grp_size.at[g].add(jnp.where(ok, 1, 0)),
+        n_dropped=st.n_dropped + jnp.where(ok | jnp.logical_not(enabled), 0, 1),
     )
     if is_migration:
-        st["n_mig"] = st["n_mig"] + jnp.where(ok, 1, 0)
-    return st
+        updates["n_mig"] = st.n_mig + jnp.where(ok, 1, 0)
+    return st.replace(**updates)
 
 
-def _invalidate(st, lba):
-    blk = st["map_blk"][lba]
-    slot = st["map_slot"][lba]
-    has = blk >= 0
-    blk_c = jnp.maximum(blk, 0)
-    old_g = st["group_of"][blk_c]
-    st = dict(st)
-    st["valid"] = st["valid"].at[blk_c, slot].set(
-        jnp.where(has, False, st["valid"][blk_c, slot])
-    )
-    st["live"] = st["live"].at[blk_c].add(jnp.where(has, -1, 0))
-    st["grp_size"] = st["grp_size"].at[jnp.maximum(old_g, 0)].add(
-        jnp.where(has & (old_g >= 0), -1, 0)
+def _invalidate(ctx: SimContext, st: SimState, lba):
+    b = ctx.geom.pages_per_block
+    pm = st.page_map[lba]
+    has = pm >= 0
+    pm_c = jnp.maximum(pm, 0)
+    blk_c = pm_c // b
+    slot = pm_c % b
+    old_g = st.group_of[blk_c]
+    st = st.replace(
+        valid=st.valid.at[blk_c, slot].set(
+            jnp.where(has, False, st.valid[blk_c, slot])
+        ),
+        live=st.live.at[blk_c].add(jnp.where(has, -1, 0)),
+        grp_size=st.grp_size.at[jnp.maximum(old_g, 0)].add(
+            jnp.where(has & (old_g >= 0), -1, 0)
+        ),
     )
     return st, jnp.where(has, old_g, 0)
 
@@ -210,83 +267,339 @@ def _invalidate(st, lba):
 # garbage collection (one victim) — §5.4
 # ---------------------------------------------------------------------------
 
-def _select_victim(ctx: SimContext, st, g, gc_lru):
-    closed = (st["state"] == CLOSED) & (st["group_of"] == g)
-    score_lru = jnp.where(closed, st["stamp"], INT_MAX)
-    score_greedy = jnp.where(closed, st["live"], INT_MAX)
+def _select_victim(ctx: SimContext, st: SimState, g, gc_lru):
+    closed = (st.state == CLOSED) & (st.group_of == g)
+    score_lru = jnp.where(closed, st.stamp, INT_MAX)
+    score_greedy = jnp.where(closed, st.live, INT_MAX)
     victim = jnp.argmin(jnp.where(gc_lru, score_lru, score_greedy))
     # a fully-live greedy victim frees nothing: skip (movement-op no-op guard)
     ok = closed[victim] & (
-        gc_lru | (st["live"][victim] < ctx.geom.pages_per_block)
+        gc_lru | (st.live[victim] < ctx.geom.pages_per_block)
     )
     return victim, ok
 
 
-def _gc_one(ctx: SimContext, st, g, demote_fn, gc_lru):
-    """GC one victim in group g; migrate live pages via the write path.
+def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
+    """Vectorized victim drain: migrate every live page in one shot.
 
-    demote_fn(st, lba, g) -> target group for a migrated page (§5.6 demotion:
-    bloom/fdp detectors may demote during GC; static keeps g).
+    Elementwise-identical to :func:`_gc_drain_reference` whenever no write
+    is dropped mid-drain (the pool-reserve invariant callers maintain;
+    tests assert ``n_dropped == 0``). The only sequential remnant is the
+    demotion decision below — everything that lands state is a chunked
+    gather/scatter.
     """
+    b = ctx.geom.pages_per_block
+    k = ctx.geom.n_blocks
+    g_max = st.grp_active.shape[0]
+    lba_pages = st.page_map.shape[0]
+    g32 = jnp.asarray(g, jnp.int32)
+
+    lbas = st.slot_lba[victim]            # [B]; dead slots hold -1
+    is_live = st.valid[victim]            # [B]
+    lbas_c = jnp.maximum(lbas, 0)
+    n_live = jnp.sum(is_live)
+
+    # -- per-slot DEMOTION FLAGS (§5.6), vectorized over the victim's lanes.
+    # A GC demotion only ever moves a page one group colder, and whether a
+    # page is demotion-eligible depends solely on drain-invariant state
+    # (oracle rates, fdp bands, the bloom filter pair) — so it precomputes
+    # as one [B] mask. Keeping the big state arrays out of the per-slot
+    # machinery below matters: anything a lax.scan/switch touches is hauled
+    # through the loop boundary every iteration on XLA:CPU.
+    def static_flags(lbas_c):
+        return jnp.zeros(b, bool)
+
+    def fdp_flags(lbas_c):
+        r = jax.vmap(lambda l: rate_fn(st, l))(lbas_c)
+        return r < 0.5 * policy["fdp_rate"][g]
+
+    def bloom_flags(lbas_c):
+        in_a = jax.vmap(
+            lambda l: _bloom_query(ctx, st.bloom_active, l, g)
+        )(lbas_c)
+        in_p = jax.vmap(
+            lambda l: _bloom_query(ctx, st.bloom_passive, l, g)
+        )(lbas_c)
+        return ~in_a & ~in_p
+
+    flag_branches = [static_flags, fdp_flags]
+    if ctx.use_bloom:
+        flag_branches.append(bloom_flags)
+    demote_flag = jax.lax.switch(policy["td_mode"], flag_branches, lbas_c)
+
+    # -- per-slot target groups, exact sequential semantics. A demoted page
+    # lands one group colder BY CURRENT HIT-RATE ORDER, and hit rates
+    # (grp_p / grp_size) drift as the drain itself moves pages — so when any
+    # page is flagged, a lax.scan carrying ONLY the [G] group sizes replays
+    # the per-page neighbor decisions bit-exactly. The common case (static
+    # detector / nothing flagged) short-circuits to constant targets.
+    grp_p, grp_active = st.grp_p, st.grp_active
+
+    def const_targets(_):
+        return jnp.full(b, g32)
+
+    arange_g = jnp.arange(g_max, dtype=jnp.int32)
+
+    def scan_targets(_):
+        def body(gs, xs):
+            flag, live = xs
+            # _hit_rates over the drifted sizes, [G]-sized
+            hr = jnp.where(
+                grp_active,
+                grp_p / jnp.maximum(gs.astype(jnp.float32), 1.0),
+                -1.0,
+            )
+            # next-colder ACTIVE group by current hit-rate order — the
+            # reductions replicate _sgv_neighbors' stable argsort (ties
+            # break by index): the candidate set is every active group
+            # strictly after g in (-hr, index) lexicographic order, and
+            # the neighbor is its (max hr, then min index) element. No
+            # sort: a batched XLA:CPU sort 16×/drain dominates the drain.
+            hr_g = hr[g]
+            cand = grp_active & (
+                (hr < hr_g) | ((hr == hr_g) & (arange_g > g32))
+            )
+            best_hr = jnp.max(jnp.where(cand, hr, -2.0))
+            nb = jnp.min(
+                jnp.where(cand & (hr == best_hr), arange_g, g_max)
+            )
+            # empty candidate set: an active g is already the coldest and
+            # stays put; an inactive g (post-merge corner) falls to the
+            # coldest active — exactly argsort's clip(rank+1, n_active-1)
+            cold_hr = jnp.min(jnp.where(grp_active, hr, jnp.inf))
+            coldest = jnp.max(
+                jnp.where(grp_active & (hr == cold_hr), arange_g, -1)
+            )
+            fallback = jnp.where(grp_active[g], g32, coldest)
+            nb = jnp.where(jnp.any(cand), nb, fallback)
+            t = jnp.where(flag & live, nb, g32).astype(jnp.int32)
+            gs = gs.at[g].add(jnp.where(live, -1, 0)).at[t].add(
+                jnp.where(live, 1, 0)
+            )
+            return gs, t
+
+        _, ts = jax.lax.scan(body, st.grp_size, (demote_flag, is_live))
+        return ts
+
+    targets = jax.lax.cond(
+        jnp.any(demote_flag & is_live), scan_targets, const_targets, 0
+    )
+    t_live = jnp.where(is_live, targets, g_max)  # dead rows → masked out
+
+    # NOTE on lowering: XLA:CPU's scatter expander rewrites every multi-row
+    # .at[] scatter into a while loop (measured: ~14 scatters/drain → ~40
+    # extra loops, ~70µs, 4× the whole drain). Group/block-sized updates
+    # below therefore use DENSE one-hot masked ops ([b,G]/[G,K]/[b,K] —
+    # tiny, they fuse); only the two capacity-sized updates (page_map and
+    # the compact_slots pool copy) stay 1-D scatters, where ONE expanded
+    # loop per drain beats a capacity-wide mask. Scalar-index updates (the
+    # victim erase) lower to dynamic-update-slice and are free either way.
+    arange_k = jnp.arange(k, dtype=jnp.int32)
+    idx = jnp.arange(b, dtype=jnp.int32)
+
+    # -- segment-count pages per target group; claim fresh blocks up front.
+    # A victim holds ≤ B live pages, so each target group claims at most ONE
+    # fresh block per drain; the i-th claim (ordered by the slot position of
+    # the first non-fitting page) takes the i-th lowest-index FREE block —
+    # exactly what the sequential argmax-pop produces.
+    onehot_t = t_live[:, None] == arange_g[None, :]  # [b, G], live rows only
+    m = jnp.sum(onehot_t, axis=0, dtype=jnp.int32)   # pages per target group
+    ab = st.active_blk
+    has_ab = ab >= 0
+    ab_c = jnp.maximum(ab, 0)
+    fill_ab = jnp.where(has_ab, st.fill[ab_c], b)
+    space = b - jnp.minimum(fill_ab, b)   # free slots in the active block
+    claim = m > space                     # group needs a fresh block
+    seal = claim & has_ab                 # …sealing its current active
+
+    # within-group rank of each live page, in slot order
+    same = (
+        (targets[:, None] == targets[None, :])
+        & is_live[None, :] & is_live[:, None]
+    )
+    rank = jnp.sum(same & (idx[None, :] < idx[:, None]), axis=1)
+
+    is_claim_pg = is_live & (rank == space[targets])
+    claim_pos = jnp.min(
+        jnp.where(onehot_t & is_claim_pg[:, None], idx[:, None], INT_MAX),
+        axis=0,
+    )  # [G] slot position of each group's claim
+    claim_rank = jnp.sum(
+        claim[None, :] & (claim_pos[None, :] < claim_pos[:, None]), axis=1
+    )
+    free_mask = st.state == FREE
+    n_free = jnp.sum(free_mask)
+    # free_by_rank[r] = r-th lowest FREE block index (what the sequential
+    # argmax-pop hands out); an XLA:CPU sort here would cost ~100µs/drain
+    frank = jnp.cumsum(free_mask) - 1  # free-rank of each free block
+    free_by_rank = jnp.min(
+        jnp.where(
+            free_mask[None, :] & (frank[None, :] == arange_g[:, None]),
+            arange_k[None, :], k,
+        ),
+        axis=1,
+    )  # [G]
+    claim_ok = claim & (claim_rank < n_free)  # pool-exhausted claims fail
+    new_blk = jnp.where(
+        claim_ok, free_by_rank[jnp.minimum(claim_rank, g_max - 1)], -1
+    )
+
+    # -- per-page destinations ---------------------------------------------
+    space_p = space[targets]
+    in_old = rank < space_p
+    dst_blk = jnp.where(in_old, ab_c[targets], new_blk[targets])
+    dst_slot = jnp.where(in_old, fill_ab[targets] + rank, rank - space_p)
+    ok = is_live & (in_old | claim_ok[targets])
+    db = jnp.where(ok, dst_blk, k)        # masked rows land nowhere
+
+    # -- seal / claim bookkeeping ------------------------------------------
+    seal_mask = jnp.any(
+        (ab_c[None, :] == arange_k[:, None]) & seal[None, :], axis=1
+    )  # [K]
+    claim_onehot = (
+        (new_blk[None, :] == arange_k[:, None]) & claim_ok[None, :]
+    )  # [K, G]
+    claim_mask = jnp.any(claim_onehot, axis=1)
+    state_a = jnp.where(seal_mask, CLOSED, st.state)
+    state_a = jnp.where(claim_mask, OPEN, state_a)
+    group_of = jnp.where(
+        claim_mask, jnp.sum(claim_onehot * arange_g[None, :], axis=1),
+        st.group_of,
+    )
+    stamp = jnp.where(
+        claim_mask,
+        jnp.sum(claim_onehot * (st.clock + claim_rank)[None, :], axis=1),
+        st.stamp,
+    )
+    clock = st.clock + jnp.sum(claim_ok)
+    grp_phys = st.grp_phys + claim_ok.astype(jnp.int32)
+    active_blk = jnp.where(claim_ok, new_blk, ab)
+
+    # -- land the pages (dense chunked writes) ------------------------------
+    dst_onehot = db[:, None] == arange_k[None, :]    # [b, K], ok rows only
+    dst_count = jnp.sum(dst_onehot, axis=0, dtype=jnp.int32)
+    fill_a = jnp.where(claim_mask, 0, st.fill) + dst_count
+    live_a = st.live + dst_count
+    # the slot-content copy (victim slots → destination slots) is the GC
+    # kernel's move list: Pallas-backed on TPU, dense one-hot writes off-TPU
+    slot_lba, valid = compact_slots(
+        st.slot_lba, st.valid,
+        jnp.where(ok, victim, -1), idx, db, dst_slot,
+    )
+    # 1-D scatter, not a [b, LBA] one-hot: a dense mask here would scale
+    # with drive capacity, and a single expanded scatter loop per site is
+    # measurably cheaper than the capacity-wide mask even at test geometry
+    page_map = st.page_map.at[jnp.where(is_live, lbas_c, lba_pages)].set(
+        jnp.where(ok, dst_blk * b + dst_slot, -1), mode="drop"
+    )  # dead slots land out of bounds → untouched
+    grp_size = (
+        st.grp_size.at[g].add(-n_live)
+        + jnp.sum(onehot_t & ok[:, None], axis=0, dtype=jnp.int32)
+    )
+
+    # -- erase the victim ---------------------------------------------------
+    return st.replace(
+        state=state_a.at[victim].set(FREE),
+        group_of=group_of.at[victim].set(-1),
+        fill=fill_a.at[victim].set(0),
+        live=live_a.at[victim].set(0),
+        slot_lba=slot_lba.at[victim].set(-1),
+        valid=valid.at[victim].set(False),
+        stamp=stamp.at[victim].set(clock),
+        clock=clock + 1,
+        grp_phys=grp_phys.at[g].add(-1),
+        active_blk=active_blk,
+        page_map=page_map,
+        grp_size=grp_size,
+        n_mig=st.n_mig + jnp.sum(ok),
+        n_dropped=st.n_dropped + jnp.sum(is_live & jnp.logical_not(ok)),
+        n_erase=st.n_erase + 1,
+    )
+
+
+def _gc_drain_reference(ctx: SimContext, st: SimState, victim, g, demote_fn):
+    """The pre-refactor per-page drain (16-step fori of single-page writes).
+
+    Kept as the equivalence oracle for :func:`_gc_drain_bulk`
+    (tests/test_bulk_gc.py); never on the default path.
+    """
+    b = ctx.geom.pages_per_block
+
+    def body(j, st):
+        # masked migration (no lax.cond: under vmap a per-slot cond would
+        # select over the whole state pytree B×/GC)
+        lba = st.slot_lba[victim, j]
+        is_live = st.valid[victim, j]
+        lba_c = jnp.maximum(lba, 0)  # dead slots hold -1
+        st = st.replace(
+            valid=st.valid.at[victim, j].set(
+                jnp.where(is_live, False, st.valid[victim, j])
+            ),
+            live=st.live.at[victim].add(jnp.where(is_live, -1, 0)),
+        )
+        g_tgt = demote_fn(st, lba_c, g)  # pure read of st
+        st = st.replace(
+            grp_size=st.grp_size.at[g].add(jnp.where(is_live, -1, 0))
+        )
+        return _write_page(
+            ctx, st, lba_c, g_tgt, is_migration=True, enabled=is_live
+        )
+
+    st = jax.lax.fori_loop(0, b, body, st)
+    # erase
+    return st.replace(
+        state=st.state.at[victim].set(FREE),
+        group_of=st.group_of.at[victim].set(-1),
+        fill=st.fill.at[victim].set(0),
+        live=st.live.at[victim].set(0),
+        slot_lba=st.slot_lba.at[victim].set(-1),
+        valid=st.valid.at[victim].set(False),
+        stamp=st.stamp.at[victim].set(st.clock),
+        clock=st.clock + 1,
+        grp_phys=st.grp_phys.at[g].add(-1),
+        n_erase=st.n_erase + 1,
+    )
+
+
+def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_lru):
+    """GC one victim in group g; migrate live pages via the bulk drain.
+
+    rate_fn(st, lba) -> the page's true update rate (oracle detector input);
+    must be a pure function of drain-invariant data (it is: oracle arrays
+    are indexed by lba/phase only). The §5.6 demotion rule itself is
+    derived from ``policy`` — see _gc_drain_bulk / _target_group_gc.
+    """
+    assert ctx.gc_impl in ("bulk", "reference"), ctx.gc_impl
     victim, ok = _select_victim(ctx, st, g, gc_lru)
     # migrations may need one fresh block beyond the active's free slots:
     # never start a GC with an empty pool (callers keep it ≥ 2).
-    ok = ok & (jnp.sum(st["state"] == FREE) >= 1)
+    ok = ok & (jnp.sum(st.state == FREE) >= 1)
+    if ctx.gc_impl == "bulk":
+        def drain(s):
+            return _gc_drain_bulk(ctx, s, victim, g, policy, rate_fn)
+    else:
+        def demote_fn(s, l, gg):
+            return _target_group_gc(ctx, s, l, gg, policy, rate_fn)
 
-    def do(st):
-        b = ctx.geom.pages_per_block
+        def drain(s):
+            return _gc_drain_reference(ctx, s, victim, g, demote_fn)
 
-        def body(j, st):
-            # masked migration (no lax.cond: under vmap a per-slot cond
-            # would select over the whole state pytree 16×/GC)
-            lba = st["slot_lba"][victim, j]
-            is_live = st["valid"][victim, j]
-            lba_c = jnp.maximum(lba, 0)  # dead slots hold -1
-            st = dict(st)
-            st["valid"] = st["valid"].at[victim, j].set(
-                jnp.where(is_live, False, st["valid"][victim, j])
-            )
-            st["live"] = st["live"].at[victim].add(
-                jnp.where(is_live, -1, 0)
-            )
-            g_tgt = demote_fn(st, lba_c, g)  # pure read of st
-            st["grp_size"] = st["grp_size"].at[g].add(
-                jnp.where(is_live, -1, 0)
-            )
-            return _write_page(
-                ctx, st, lba_c, g_tgt, is_migration=True, enabled=is_live
-            )
-
-        st = jax.lax.fori_loop(0, b, body, dict(st))
-        # erase
-        st["state"] = st["state"].at[victim].set(FREE)
-        st["group_of"] = st["group_of"].at[victim].set(-1)
-        st["fill"] = st["fill"].at[victim].set(0)
-        st["live"] = st["live"].at[victim].set(0)
-        st["slot_lba"] = st["slot_lba"].at[victim].set(-1)
-        st["valid"] = st["valid"].at[victim].set(False)
-        st["stamp"] = st["stamp"].at[victim].set(st["clock"])
-        st["clock"] = st["clock"] + 1
-        st["grp_phys"] = st["grp_phys"].at[g].add(-1)
-        st["n_erase"] = st["n_erase"] + 1
-        return st
-
-    return jax.lax.cond(ok, do, lambda s: dict(s), st)
+    return jax.lax.cond(ok, drain, lambda s: s, st)
 
 
 # ---------------------------------------------------------------------------
 # over-provisioning allocation (interval) — §5.5
 # ---------------------------------------------------------------------------
 
-def _recompute_alloc(ctx: SimContext, st, policy):
+def _recompute_alloc(ctx: SimContext, st: SimState, policy):
     geom, mcfg = ctx.geom, ctx.mcfg
     b = geom.pages_per_block
-    active = st["grp_active"]
-    s = jnp.where(active, st["grp_size"].astype(jnp.float32), 0.0)
+    active = st.grp_active
+    s = jnp.where(active, st.grp_size.astype(jnp.float32), 0.0)
     s = jnp.maximum(s, jnp.where(active, 1.0, 0.0))
     use_assumed = policy["alloc_mode"] == ALLOC_FDP
     p = jnp.where(
-        active, jnp.where(use_assumed, policy["assumed_p"], st["grp_p"]), 0.0
+        active, jnp.where(use_assumed, policy["assumed_p"], st.grp_p), 0.0
     )
     p = p / jnp.maximum(p.sum(), 1e-9)
     # usable OP = spare pages beyond logical content, minus the GC reserve
@@ -312,22 +625,19 @@ def _recompute_alloc(ctx: SimContext, st, policy):
     op = jnp.where(is_closed, op_closed, jnp.where(is_freq, op_freq, op_size))
     alloc_blocks = jnp.ceil((s + op) / b).astype(jnp.int32)
     alloc_blocks = jnp.where(active, jnp.maximum(alloc_blocks, 1), 0)
-    st = dict(st)
-    st["grp_alloc"] = alloc_blocks
-    return st
+    return st.replace(grp_alloc=alloc_blocks)
 
 
-def _interval_update(ctx: SimContext, st, policy):
-    mcfg = ctx.mcfg
-    st = dict(st)
-    u = st["grp_writes"].astype(jnp.float32) / ctx.h
-    active = st["grp_active"]
-    st["grp_p"] = jnp.where(
-        active, st["grp_p"] * (1 - mcfg.ewma_a) + mcfg.ewma_a * u, 0.0
+def _interval_update(ctx: SimContext, st: SimState, policy):
+    a = policy["ewma_a"]
+    u = st.grp_writes.astype(jnp.float32) / policy["h"].astype(jnp.float32)
+    active = st.grp_active
+    st = st.replace(
+        grp_p=jnp.where(active, st.grp_p * (1.0 - a) + a * u, 0.0),
+        grp_writes=jnp.zeros_like(st.grp_writes),
+        interval=st.interval + 1,
+        cooldown=jnp.maximum(st.cooldown - 1, 0),
     )
-    st["grp_writes"] = jnp.zeros_like(st["grp_writes"])
-    st["interval"] = st["interval"] + 1
-    st["cooldown"] = jnp.maximum(st["cooldown"] - 1, 0)
     st = _maybe_create_or_merge(ctx, st, policy)
     st = _recompute_alloc(ctx, st, policy)
     return st
@@ -337,49 +647,49 @@ def _interval_update(ctx: SimContext, st, policy):
 # group creation / merging (dynamic mode) — §5.2
 # ---------------------------------------------------------------------------
 
-def _hit_rates(st):
-    s = jnp.maximum(st["grp_size"].astype(jnp.float32), 1.0)
-    hr = st["grp_p"] / s
-    return jnp.where(st["grp_active"], hr, -1.0)
+def _hit_rates(st: SimState):
+    s = jnp.maximum(st.grp_size.astype(jnp.float32), 1.0)
+    hr = st.grp_p / s
+    return jnp.where(st.grp_active, hr, -1.0)
 
 
-def _maybe_create_or_merge(ctx: SimContext, st, policy):
+def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
     mcfg = ctx.mcfg
     dynamic = policy["dynamic_groups"]
     f_min = policy["f_min_pages"]
     hr = _hit_rates(st)
     order = jnp.argsort(-hr)  # hottest first
     hottest, second = order[0], order[1]
-    n_active = st["grp_active"].sum()
+    n_active = st.grp_active.sum()
     can_slot = n_active < policy["max_groups"]
     hot_ratio = hr[hottest] / jnp.maximum(hr[second], 1e-12)
     create = (
         dynamic
         & can_slot
-        & (st["cooldown"] == 0)
+        & (st.cooldown == 0)
         & (n_active >= 2)
         & (hot_ratio >= mcfg.q_create)
-        & (st["grp_size"][hottest] >= f_min)
+        & (st.grp_size[hottest] >= f_min)
     )
 
     def do_create(st):
-        st = dict(st)
-        slot = jnp.argmin(st["grp_active"])  # first inactive slot
-        st["grp_active"] = st["grp_active"].at[slot].set(True)
-        # seed stats: half the hottest group's measured frequency
-        st["grp_p"] = st["grp_p"].at[slot].set(st["grp_p"][hottest] * 0.5)
-        st["grp_size"] = st["grp_size"].at[slot].set(0)
-        st["grp_phys"] = st["grp_phys"].at[slot].set(0)
-        st["grp_created"] = st["grp_created"].at[slot].set(st["interval"])
-        st["cooldown"] = jnp.asarray(mcfg.w_intervals, jnp.int32)
-        return st
+        slot = jnp.argmin(st.grp_active)  # first inactive slot
+        return st.replace(
+            grp_active=st.grp_active.at[slot].set(True),
+            # seed stats: half the hottest group's measured frequency
+            grp_p=st.grp_p.at[slot].set(st.grp_p[hottest] * 0.5),
+            grp_size=st.grp_size.at[slot].set(0),
+            grp_phys=st.grp_phys.at[slot].set(0),
+            grp_created=st.grp_created.at[slot].set(st.interval),
+            cooldown=jnp.asarray(mcfg.w_intervals, jnp.int32),
+        )
 
-    st = jax.lax.cond(create, do_create, lambda s: dict(s), st)
+    st = jax.lax.cond(create, do_create, lambda s: s, st)
 
     # merge: coldest adjacent pair that converged, or an undersized group
     hr = _hit_rates(st)
     order = jnp.argsort(-hr)
-    n_active = st["grp_active"].sum()
+    n_active = st.grp_active.sum()
     # adjacent pair ratios in hit-rate order
     hr_sorted = hr[order]
     idx = jnp.arange(hr.shape[0])
@@ -387,53 +697,52 @@ def _maybe_create_or_merge(ctx: SimContext, st, policy):
     ratio = hr_sorted / jnp.maximum(jnp.roll(hr_sorted, -1), 1e-12)
     converged = valid_pair & (ratio < 1.3) & (hr_sorted > 0)
     tiny = valid_pair & (
-        st["grp_size"][order] < f_min
+        st.grp_size[order] < f_min
     ) & (jnp.roll(hr_sorted, -1) > 0)
     mergeable = converged | tiny
     pair_i = jnp.argmax(mergeable)
     do_merge = (
-        dynamic & mergeable[pair_i] & (st["cooldown"] == 0) & (n_active > 2)
+        dynamic & mergeable[pair_i] & (st.cooldown == 0) & (n_active > 2)
     )
 
     def merge(st):
-        st = dict(st)
         g_from = order[pair_i]          # hotter of the pair
         g_to = order[pair_i + 1]        # absorbed into the colder
         # relabel blocks (the paper: a merge is logical)
-        st["group_of"] = jnp.where(
-            st["group_of"] == g_from, g_to, st["group_of"]
-        )
+        group_of = jnp.where(st.group_of == g_from, g_to, st.group_of)
         # seal g_from's active block (no longer reachable)
-        ab = st["active_blk"][g_from]
-        st["state"] = st["state"].at[jnp.maximum(ab, 0)].set(
-            jnp.where(ab >= 0, CLOSED, st["state"][jnp.maximum(ab, 0)])
+        ab = st.active_blk[g_from]
+        state_a = st.state.at[jnp.maximum(ab, 0)].set(
+            jnp.where(ab >= 0, CLOSED, st.state[jnp.maximum(ab, 0)])
         )
-        st["active_blk"] = st["active_blk"].at[g_from].set(-1)
-        st["grp_size"] = st["grp_size"].at[g_to].add(st["grp_size"][g_from])
-        st["grp_phys"] = st["grp_phys"].at[g_to].add(st["grp_phys"][g_from])
-        st["grp_p"] = st["grp_p"].at[g_to].add(st["grp_p"][g_from])
-        st["grp_writes"] = st["grp_writes"].at[g_to].add(st["grp_writes"][g_from])
+        merged = {}
         for key in ("grp_size", "grp_phys", "grp_p", "grp_writes"):
-            st[key] = st[key].at[g_from].set(0)
-        st["grp_active"] = st["grp_active"].at[g_from].set(False)
-        st["cooldown"] = jnp.asarray(mcfg.w_intervals, jnp.int32)
-        return st
+            arr = getattr(st, key)
+            merged[key] = arr.at[g_to].add(arr[g_from]).at[g_from].set(0)
+        return st.replace(
+            group_of=group_of,
+            state=state_a,
+            active_blk=st.active_blk.at[g_from].set(-1),
+            grp_active=st.grp_active.at[g_from].set(False),
+            cooldown=jnp.asarray(mcfg.w_intervals, jnp.int32),
+            **merged,
+        )
 
-    return jax.lax.cond(do_merge, merge, lambda s: dict(s), st)
+    return jax.lax.cond(do_merge, merge, lambda s: s, st)
 
 
 # ---------------------------------------------------------------------------
 # temperature detection — §5.6 (+ oracle modes for §6 experiments)
 # ---------------------------------------------------------------------------
 
-def _sgv_neighbors(st):
+def _sgv_neighbors(st: SimState):
     """hotter_of[g], colder_of[g] by current hit-rate order."""
     hr = _hit_rates(st)
     g_max = hr.shape[0]
     # rank[g] = position in descending order
     order = jnp.argsort(-hr)
     rank = jnp.zeros(g_max, jnp.int32).at[order].set(jnp.arange(g_max))
-    n_active = st["grp_active"].sum()
+    n_active = st.grp_active.sum()
 
     def neighbor(g, delta):
         r = rank[g] + delta
@@ -443,12 +752,12 @@ def _sgv_neighbors(st):
     return neighbor
 
 
-def _target_group_app(ctx: SimContext, st, lba, cur_g, policy, rate_fn):
+def _target_group_app(ctx: SimContext, st: SimState, lba, cur_g, policy, rate_fn):
     """Target group for an application update of `lba` living in cur_g."""
     cur_g = jnp.asarray(cur_g, jnp.int32)
 
     def static_br(st):
-        return dict(st), cur_g
+        return st, cur_g
 
     def fdp_br(st):
         # fixed assumed per-page rate bands: promote if ≥2× the group's
@@ -457,7 +766,7 @@ def _target_group_app(ctx: SimContext, st, lba, cur_g, policy, rate_fn):
         r = rate_fn(st, lba)
         promote = r > 2.0 * policy["fdp_rate"][cur_g]
         g = jnp.where(promote, neighbor(cur_g, -1), cur_g)
-        return dict(st), g.astype(jnp.int32)
+        return st, g.astype(jnp.int32)
 
     def bloom_br(st):
         # bloom (§5.6): in both filters → promote
@@ -468,10 +777,10 @@ def _target_group_app(ctx: SimContext, st, lba, cur_g, policy, rate_fn):
     branches = [static_br, fdp_br]
     if ctx.use_bloom:
         branches.append(bloom_br)
-    return jax.lax.switch(policy["td_mode"], branches, dict(st))
+    return jax.lax.switch(policy["td_mode"], branches, st)
 
 
-def _target_group_gc(ctx: SimContext, st, lba, cur_g, policy, rate_fn):
+def _target_group_gc(ctx: SimContext, st: SimState, lba, cur_g, policy, rate_fn):
     cur_g = jnp.asarray(cur_g, jnp.int32)
 
     def static_br(st):
@@ -486,15 +795,15 @@ def _target_group_gc(ctx: SimContext, st, lba, cur_g, policy, rate_fn):
     def bloom_br(st):
         # bloom: in neither filter during a migration → demote
         neighbor = _sgv_neighbors(st)
-        in_active = _bloom_query(ctx, st["bloom_active"], lba, cur_g)
-        in_passive = _bloom_query(ctx, st["bloom_passive"], lba, cur_g)
+        in_active = _bloom_query(ctx, st.bloom_active, lba, cur_g)
+        in_passive = _bloom_query(ctx, st.bloom_passive, lba, cur_g)
         g = jnp.where(~in_active & ~in_passive, neighbor(cur_g, +1), cur_g)
         return g.astype(jnp.int32)
 
     branches = [static_br, fdp_br]
     if ctx.use_bloom:
         branches.append(bloom_br)
-    return jax.lax.switch(policy["td_mode"], branches, dict(st))
+    return jax.lax.switch(policy["td_mode"], branches, st)
 
 
 # -- bloom filter pair (per group) ------------------------------------------
@@ -512,29 +821,28 @@ def _bloom_query(ctx, filt, lba, g):
     return filt[g, h1] & filt[g, h2]
 
 
-def _bloom_update(ctx: SimContext, st, lba, g):
+def _bloom_update(ctx: SimContext, st: SimState, lba, g):
     """Insert lba into group g's active filter; rotate when the group's
     write interval (= group size) elapses. Returns (st, was_in_both)."""
     h1, h2, _ = _bloom_hashes(ctx, lba)
-    in_active = st["bloom_active"][g, h1] & st["bloom_active"][g, h2]
-    in_passive = st["bloom_passive"][g, h1] & st["bloom_passive"][g, h2]
-    st = dict(st)
-    st["bloom_active"] = (
-        st["bloom_active"].at[g, h1].set(True).at[g, h2].set(True)
-    )
-    st["bloom_writes"] = st["bloom_writes"].at[g].add(1)
-    rotate = st["bloom_writes"][g] >= jnp.maximum(st["grp_size"][g], 64)
+    in_active = st.bloom_active[g, h1] & st.bloom_active[g, h2]
+    in_passive = st.bloom_passive[g, h1] & st.bloom_passive[g, h2]
+    bloom_active = st.bloom_active.at[g, h1].set(True).at[g, h2].set(True)
+    bloom_writes = st.bloom_writes.at[g].add(1)
+    rotate = bloom_writes[g] >= jnp.maximum(st.grp_size[g], 64)
     # row-masked rotation (no lax.cond: under vmap a cond would select over
     # the full [G, bits] filter pair every step; this touches one row)
-    row_active = st["bloom_active"][g]
-    st["bloom_passive"] = st["bloom_passive"].at[g].set(
-        jnp.where(rotate, row_active, st["bloom_passive"][g])
-    )
-    st["bloom_active"] = st["bloom_active"].at[g].set(
-        jnp.where(rotate, False, row_active)
-    )
-    st["bloom_writes"] = st["bloom_writes"].at[g].set(
-        jnp.where(rotate, 0, st["bloom_writes"][g])
+    row_active = bloom_active[g]
+    st = st.replace(
+        bloom_passive=st.bloom_passive.at[g].set(
+            jnp.where(rotate, row_active, st.bloom_passive[g])
+        ),
+        bloom_active=bloom_active.at[g].set(
+            jnp.where(rotate, False, row_active)
+        ),
+        bloom_writes=bloom_writes.at[g].set(
+            jnp.where(rotate, 0, bloom_writes[g])
+        ),
     )
     return st, in_active & in_passive
 
@@ -551,8 +859,9 @@ def make_step(ctx: SimContext, policy, rate_fn):
     global write index t (oracle detector input; phase-aware in fleets).
     Scan input = (lba, t); t is the global application-write index, which is
     deliberately NOT taken from batched state so the interval predicate
-    stays a scalar under vmap (the expensive §5.1 bookkeeping then lowers
-    to a real branch taken every h steps, not a per-step select).
+    stays a scalar under vmap whenever every drive shares h
+    (ctx.per_drive_interval=False) — the expensive §5.1 bookkeeping then
+    lowers to a real branch taken every h steps, not a per-step select.
     """
     geom, mcfg = ctx.geom, ctx.mcfg
     b = geom.pages_per_block
@@ -563,27 +872,24 @@ def make_step(ctx: SimContext, policy, rate_fn):
         def lookup(s, l):
             return rate_fn(s, l, t)
 
-        def demote_fn(s, l, g):
-            return _target_group_gc(ctx, s, l, g, policy, lookup)
-
-        st, old_g = _invalidate(st, lba)
+        st, old_g = _invalidate(ctx, st, lba)
         st, g = _target_group_app(ctx, st, lba, old_g, policy, lookup)
-        g = jnp.where(st["grp_active"][g], g, old_g)
+        g = jnp.where(st.grp_active[g], g, old_g)
 
         # GC when the group needs a new block it is not entitled to, or the
         # pool is at reserve.
-        blk = st["active_blk"][g]
+        blk = st.active_blk[g]
         needs_block = jnp.where(
-            blk >= 0, st["fill"][jnp.maximum(blk, 0)] >= b, True
+            blk >= 0, st.fill[jnp.maximum(blk, 0)] >= b, True
         )
-        free_blocks = jnp.sum(st["state"] == FREE)
-        over_budget = st["grp_phys"][g] >= st["grp_alloc"][g]
+        free_blocks = jnp.sum(st.state == FREE)
+        over_budget = st.grp_phys[g] >= st.grp_alloc[g]
         low_pool = free_blocks <= mcfg.gc_reserve_blocks
         do_gc = needs_block & (over_budget | low_pool)
         st = jax.lax.cond(
             do_gc,
-            lambda s: _gc_one(ctx, s, g, demote_fn, policy["gc_lru"]),
-            lambda s: dict(s),
+            lambda s: _gc_one(ctx, s, g, policy, lookup, policy["gc_lru"]),
+            lambda s: s,
             st,
         )
 
@@ -592,66 +898,71 @@ def make_step(ctx: SimContext, policy, rate_fn):
         # fires when a policy briefly overdraws its budget).
         def needs_air(carry):
             s, tries = carry
-            return (jnp.sum(s["state"] == FREE) < 2) & (tries < 4)
+            return (jnp.sum(s.state == FREE) < 2) & (tries < 4)
 
         def reclaim(carry):
             s, tries = carry
             # global greedy: the best victim anywhere (its group pays)
-            closed = s["state"] == CLOSED
-            score = jnp.where(closed, s["live"], INT_MAX)
+            closed = s.state == CLOSED
+            score = jnp.where(closed, s.live, INT_MAX)
             victim = jnp.argmin(score)
-            g_v = jnp.maximum(s["group_of"][victim], 0)
+            g_v = jnp.maximum(s.group_of[victim], 0)
             return (
-                _gc_one(ctx, s, g_v, demote_fn, jnp.asarray(False)),
+                _gc_one(ctx, s, g_v, policy, lookup, jnp.asarray(False)),
                 tries + 1,
             )
 
         st, _ = jax.lax.while_loop(needs_air, reclaim, (st, 0))
 
         st = _write_page(ctx, st, lba, g, is_migration=False)
-        st["n_app"] = st["n_app"] + 1
-        st["grp_writes"] = st["grp_writes"].at[g].add(1)
+        st = st.replace(
+            n_app=st.n_app + 1,
+            grp_writes=st.grp_writes.at[g].add(1),
+        )
 
         # movement operations (§5.3): one compaction GC per step on the most
         # surplus group, donating the redeemed block to the pool.
         surplus = jnp.where(
-            st["grp_active"], st["grp_phys"] - st["grp_alloc"], -INT_MAX
+            st.grp_active, st.grp_phys - st.grp_alloc, -INT_MAX
         )
         g_s = jnp.argmax(surplus)
-        pool_ok = jnp.sum(st["state"] == FREE) >= 2  # migration headroom
+        pool_ok = jnp.sum(st.state == FREE) >= 2  # migration headroom
         st = jax.lax.cond(
             policy["movement_ops"] & (surplus[g_s] >= 1) & pool_ok,
-            lambda s: _gc_one(ctx, s, g_s, demote_fn, policy["gc_lru"]),
-            lambda s: dict(s),
+            lambda s: _gc_one(ctx, s, g_s, policy, lookup, policy["gc_lru"]),
+            lambda s: s,
             st,
         )
 
         # interval completion (§5.1); t+1 == n_app after this write, so the
-        # predicate is exactly the pre-refactor (n_app % h == 0) — but as a
-        # scalar, shared by every drive of a vmapped fleet.
-        is_interval = ((t + 1) % ctx.h) == 0
+        # predicate is exactly (n_app % h == 0). With a fleet-shared h it is
+        # a SCALAR shared by every vmapped drive; per-drive interval sweeps
+        # (ctx.per_drive_interval) read the traced policy["h"] instead.
+        h = policy["h"] if ctx.per_drive_interval else ctx.h
+        is_interval = ((t + 1) % h) == 0
         st = jax.lax.cond(
             is_interval,
             lambda s: _interval_update(ctx, s, policy),
-            lambda s: dict(s),
+            lambda s: s,
             st,
         )
-        return st, (st["n_app"], st["n_mig"])
+        return st, (st.n_app, st.n_mig)
 
     return step
 
 
 @functools.partial(jax.jit, static_argnames=("ctx",))
-def _run_jit(ctx: SimContext, st, lbas, page_rate, policy):
+def _run_jit(ctx: SimContext, st: SimState, lbas, page_rate, policy):
     def rate_fn(s, lba, t):
         return page_rate[lba]
 
     step = make_step(ctx, policy, rate_fn)
-    ts = st["n_app"] + jnp.arange(lbas.shape[0], dtype=jnp.int32)
+    ts = st.n_app + jnp.arange(lbas.shape[0], dtype=jnp.int32)
     return jax.lax.scan(step, st, (lbas, ts))
 
 
-def run(ctx: SimContext, st, lbas, *, page_rate=None, assumed_p=None, fdp_rate=None):
+def run(ctx: SimContext, st: SimState, lbas, *, page_rate=None, assumed_p=None,
+        fdp_rate=None):
     """Run the simulator over a segment of writes.
 
     lbas: int32 [T]; page_rate: float32 [LBA] true per-page update rates
@@ -667,5 +978,3 @@ def run(ctx: SimContext, st, lbas, *, page_rate=None, assumed_p=None, fdp_rate=N
         ctx, st, lbas, jnp.asarray(page_rate, jnp.float32), policy
     )
     return st, {"app": app, "mig": mig}
-
-

@@ -9,14 +9,19 @@ what we reproduce. Consequences (documented in DESIGN.md):
     changes victim-search COST, not WA (§5.4).
   * channel timing / virtual time is out of scope.
 
-State is a flat dict of jnp arrays (a pytree), so the whole simulator jits,
-checkpoints, and scans.
+State is a :class:`SimState` — a frozen dataclass registered as a JAX
+pytree, so the whole simulator jits, vmaps, checkpoints, and scans. The
+logical→physical mapping is ONE packed int32 array (``page_map``,
+``blk * pages_per_block + slot``, ``-1`` = unmapped), so every lookup,
+invalidate, and write touches a single gather/scatter instead of two.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
 import jax.numpy as jnp
 
 FREE, OPEN, CLOSED = 0, 1, 2
@@ -65,7 +70,8 @@ class ManagerConfig:
     #   bloom   — two bloom filters per group (paper §5.6)
     td_mode: str = "static"
     dynamic_groups: bool = False  # create/merge groups (paper §5.2)
-    # paper constants
+    # paper constants; interval_frac and ewma_a are lowered into the traced
+    # per-drive policy pytree (fleet drives may sweep them — §5.1 knobs)
     interval_frac: float = 0.001  # h = LBA · 0.001
     ewma_a: float = 0.3
     q_create: float = 2.0
@@ -83,13 +89,85 @@ def bloom_bits(geom: Geometry, mcfg: ManagerConfig) -> int:
     )
 
 
+_SIM_STATE_FIELDS = (
+    # page mapping (packed: blk * pages_per_block + slot, -1 = unmapped)
+    "page_map",
+    # block state
+    "slot_lba", "valid", "live", "fill", "stamp", "state", "group_of",
+    # per-group
+    "active_blk", "grp_size", "grp_phys", "grp_p", "grp_writes",
+    "grp_alloc", "grp_active", "grp_created",
+    # detector (bloom filter pair)
+    "bloom_active", "bloom_passive", "bloom_writes",
+    # counters
+    "n_app", "n_mig", "n_erase", "n_dropped", "clock", "interval",
+    "cooldown",
+)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=list(_SIM_STATE_FIELDS),
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class SimState:
+    """Full drive state: a frozen, pytree-registered bundle of jnp arrays.
+
+    Immutable by construction — state-mutating helpers build the successor
+    state with :meth:`replace` (no ``dict(st)`` copies). Mapping-style read
+    access (``st["live"]``, ``.items()``) is kept for analysis/tests code
+    that iterates fields generically.
+    """
+
+    page_map: jax.Array  # [LBA] int32 packed physical address, -1 unmapped
+    slot_lba: jax.Array  # [K, B] int32 lba living in each slot, -1 empty
+    valid: jax.Array     # [K, B] bool
+    live: jax.Array      # [K] int32 live pages per block
+    fill: jax.Array      # [K] int32 written slots per block
+    stamp: jax.Array     # [K] int32 LRU age (claim-time clock)
+    state: jax.Array     # [K] int8 FREE/OPEN/CLOSED
+    group_of: jax.Array  # [K] int32 owning group, -1 = none
+    active_blk: jax.Array   # [G] int32 open block per group, -1 = none
+    grp_size: jax.Array     # [G] int32 logical pages per group
+    grp_phys: jax.Array     # [G] int32 physical blocks per group
+    grp_p: jax.Array        # [G] float32 EWMA update frequency
+    grp_writes: jax.Array   # [G] int32 writes this interval
+    grp_alloc: jax.Array    # [G] int32 block budget (§5.5)
+    grp_active: jax.Array   # [G] bool
+    grp_created: jax.Array  # [G] int32 creation interval
+    bloom_active: jax.Array   # [G, bits] bool (§5.6); [G, 1] when unused
+    bloom_passive: jax.Array  # [G, bits] bool
+    bloom_writes: jax.Array   # [G] int32
+    n_app: jax.Array      # [] int32 application writes
+    n_mig: jax.Array      # [] int32 GC migrations
+    n_erase: jax.Array    # [] int32 block erases
+    n_dropped: jax.Array  # [] int32 dropped writes (pool exhausted; tested 0)
+    clock: jax.Array      # [] int32 block-claim clock (LRU)
+    interval: jax.Array   # [] int32 completed §5.1 intervals
+    cooldown: jax.Array   # [] int32 intervals until create/merge allowed
+
+    def replace(self, **updates) -> "SimState":
+        return dataclasses.replace(self, **updates)
+
+    # -- read-only mapping conveniences (analysis / generic test code) ------
+    def __getitem__(self, key: str) -> jax.Array:
+        return getattr(self, key)
+
+    def keys(self):
+        return iter(_SIM_STATE_FIELDS)
+
+    def items(self):
+        return ((k, getattr(self, k)) for k in _SIM_STATE_FIELDS)
+
+
 def init_state(
     geom: Geometry,
     mcfg: ManagerConfig,
     page_group,
     n_groups: int,
     use_bloom: bool = True,
-):
+) -> SimState:
     """Build a pre-conditioned (fully mapped) drive.
 
     page_group: int array [LBA] — initial group of every logical page.
@@ -104,8 +182,7 @@ def init_state(
     assert page_group.max() < n_groups <= g_max
 
     order = np.argsort(page_group, kind="stable")  # group-contiguous layout
-    map_blk = np.full(lba, -1, np.int32)
-    map_slot = np.full(lba, -1, np.int32)
+    page_map = np.full(lba, -1, np.int32)
     slot_lba = np.full((k, b), -1, np.int32)
     valid = np.zeros((k, b), bool)
     live = np.zeros(k, np.int32)
@@ -125,8 +202,7 @@ def init_state(
         if slot == 0:
             group_of[blk] = g
             state_arr[blk] = CLOSED
-        map_blk[idx] = blk
-        map_slot[idx] = slot
+        page_map[idx] = blk * b + slot
         slot_lba[blk, slot] = idx
         valid[blk, slot] = True
         slot += 1
@@ -147,46 +223,41 @@ def init_state(
     grp_active = np.zeros(g_max, bool)
     grp_active[:n_groups] = True
 
-    return {
-        # page mapping
-        "map_blk": jnp.asarray(map_blk),
-        "map_slot": jnp.asarray(map_slot),
-        # block state
-        "slot_lba": jnp.asarray(slot_lba),
-        "valid": jnp.asarray(valid),
-        "live": jnp.asarray(live),
-        "fill": jnp.asarray(fill),
+    return SimState(
+        page_map=jnp.asarray(page_map),
+        slot_lba=jnp.asarray(slot_lba),
+        valid=jnp.asarray(valid),
+        live=jnp.asarray(live),
+        fill=jnp.asarray(fill),
         # LRU ages: initially-filled blocks aged by layout order (see
         # simulator._pop_free_block for the claim-time clock)
-        "stamp": jnp.asarray(
+        stamp=jnp.asarray(
             np.where(np.arange(k) < blk, np.arange(k), 0).astype(np.int32)
         ),
-        "state": jnp.asarray(state_arr),
-        "group_of": jnp.asarray(group_of),
-        # per-group
-        "active_blk": jnp.full(g_max, -1, jnp.int32),
-        "grp_size": jnp.asarray(grp_size),
-        "grp_phys": jnp.asarray(grp_phys),
-        "grp_p": jnp.zeros(g_max, jnp.float32),
-        "grp_writes": jnp.zeros(g_max, jnp.int32),
-        "grp_alloc": jnp.asarray(np.maximum(grp_phys, 1)),
-        "grp_active": jnp.asarray(grp_active),
-        "grp_created": jnp.zeros(g_max, jnp.int32),
-        # detector (bloom); (G, 1) placeholder when the context excludes the
-        # bloom branch (SimContext.use_bloom=False)
-        "bloom_active": jnp.zeros(
+        state=jnp.asarray(state_arr),
+        group_of=jnp.asarray(group_of),
+        active_blk=jnp.full(g_max, -1, jnp.int32),
+        grp_size=jnp.asarray(grp_size),
+        grp_phys=jnp.asarray(grp_phys),
+        grp_p=jnp.zeros(g_max, jnp.float32),
+        grp_writes=jnp.zeros(g_max, jnp.int32),
+        grp_alloc=jnp.asarray(np.maximum(grp_phys, 1)),
+        grp_active=jnp.asarray(grp_active),
+        grp_created=jnp.zeros(g_max, jnp.int32),
+        # (G, 1) placeholder when the context excludes the bloom branch
+        # (SimContext.use_bloom=False)
+        bloom_active=jnp.zeros(
             (g_max, bloom_bits(geom, mcfg) if use_bloom else 1), bool
         ),
-        "bloom_passive": jnp.zeros(
+        bloom_passive=jnp.zeros(
             (g_max, bloom_bits(geom, mcfg) if use_bloom else 1), bool
         ),
-        "bloom_writes": jnp.zeros(g_max, jnp.int32),
-        # counters
-        "n_app": jnp.zeros((), jnp.int32),
-        "n_mig": jnp.zeros((), jnp.int32),
-        "n_erase": jnp.zeros((), jnp.int32),
-        "n_dropped": jnp.zeros((), jnp.int32),
-        "clock": jnp.asarray(blk, jnp.int32),
-        "interval": jnp.zeros((), jnp.int32),
-        "cooldown": jnp.zeros((), jnp.int32),
-    }
+        bloom_writes=jnp.zeros(g_max, jnp.int32),
+        n_app=jnp.zeros((), jnp.int32),
+        n_mig=jnp.zeros((), jnp.int32),
+        n_erase=jnp.zeros((), jnp.int32),
+        n_dropped=jnp.zeros((), jnp.int32),
+        clock=jnp.asarray(blk, jnp.int32),
+        interval=jnp.zeros((), jnp.int32),
+        cooldown=jnp.zeros((), jnp.int32),
+    )

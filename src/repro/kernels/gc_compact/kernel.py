@@ -75,6 +75,31 @@ def _run(pool, moves, *, interpret):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def compact_slots(
+    slot_lba: jax.Array,
+    valid: jax.Array,
+    src_block: jax.Array,
+    src_slot: jax.Array,
+    dst_block: jax.Array,
+    dst_slot: jax.Array,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Metadata-pool variant of :func:`gc_compact` for the simulator's
+    bulk-GC drain: the pools are the [K, B] per-slot lba map and its valid
+    bitmap (reshaped to [K, B, 1, 1] tiles), the move list is a victim's
+    live slots. Same scalar-prefetch kernel, scalar payload."""
+    moves = jnp.stack(
+        [src_block, src_slot, dst_block, dst_slot], axis=1
+    ).astype(jnp.int32)
+    lba_new = _run(slot_lba[..., None, None], moves, interpret=interpret)
+    val_new = _run(
+        valid[..., None, None].astype(jnp.int32), moves, interpret=interpret
+    )
+    return lba_new[..., 0, 0], val_new[..., 0, 0].astype(valid.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def gc_compact(
     k_pool: jax.Array,
     v_pool: jax.Array,

@@ -1,11 +1,12 @@
-"""Public op: gc_compact (interpret fallback off-TPU)."""
+"""Public ops: gc_compact + compact_slots (Pallas on TPU, fallback off-TPU)."""
 
 from __future__ import annotations
 
 import jax
 
+from .kernel import compact_slots as _compact_slots_kernel
 from .kernel import gc_compact as _kernel
-from .ref import gc_compact_ref
+from .ref import compact_slots_dense, compact_slots_ref, gc_compact_ref
 
 
 def gc_compact(k_pool, v_pool, src_block, src_slot, dst_block, dst_slot):
@@ -15,4 +16,28 @@ def gc_compact(k_pool, v_pool, src_block, src_slot, dst_block, dst_slot):
     )
 
 
-__all__ = ["gc_compact", "gc_compact_ref"]
+def compact_slots(slot_lba, valid, src_block, src_slot, dst_block, dst_slot):
+    """Bulk-GC slot-content copy used by core/simulator's vectorized drain.
+
+    On TPU the move list feeds the Pallas scalar-prefetch kernel. Off-TPU
+    the dense one-hot lowering runs instead (identical math — asserted
+    equal to both the scatter reference and the interpret-mode kernel in
+    tests/test_kernels.py): this op sits inside the per-write ``lax.scan``
+    of a possibly-vmapped fleet, where interpret-mode grid emulation or an
+    XLA:CPU-expanded scatter loop would serialize the very hot path the
+    bulk drain exists to speed up.
+    """
+    if jax.default_backend() == "tpu":
+        return _compact_slots_kernel(
+            slot_lba, valid, src_block, src_slot, dst_block, dst_slot,
+            interpret=False,
+        )
+    return compact_slots_dense(
+        slot_lba, valid, src_block, src_slot, dst_block, dst_slot
+    )
+
+
+__all__ = [
+    "gc_compact", "gc_compact_ref",
+    "compact_slots", "compact_slots_ref", "compact_slots_dense",
+]

@@ -1,0 +1,125 @@
+"""Bulk-GC equivalence suite (the tentpole's acceptance bar).
+
+The vectorized drain (``simulator._gc_drain_bulk``) must be
+elementwise-identical to the seed per-page path (retained as
+``simulator._gc_drain_reference``) — final state, ``n_erase``, ``n_mig``,
+and WA curves — across allocation / GC / detector policy combinations,
+under both jit (``managers.simulate``) and vmap (``simulate_fleet``).
+"""
+
+import inspect
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import managers as M
+from repro.core import simulator as S
+from repro.core import workloads as W
+from repro.core.fleet import DriveSpec, simulate_fleet
+from repro.core.ssd import Geometry
+
+GEOM = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8, lba_pba=0.7)
+N_WRITES = 6_000
+
+_MANAGERS = {
+    "wolf": M.wolf,            # closed-form alloc, greedy GC, static TD
+    "wolf_lru": M.wolf_lru,    # LRU GC under movement ops
+    "fdp": M.fdp,              # assumed alloc, LRU GC, fdp demotion
+    "wolf_dynamic": M.wolf_dynamic,  # bloom detector + dynamic groups
+    "single": M.single_group,  # one group, size alloc
+}
+
+
+def _phases(workload: str, rng: np.random.Generator):
+    lba = GEOM.lba_pages
+    if workload == "two_modal":
+        return [W.two_modal(
+            lba, N_WRITES,
+            p_hot=float(rng.uniform(0.6, 0.95)),
+            frac_hot=float(rng.uniform(0.2, 0.8)),
+        )]
+    if workload == "tpcc":
+        return [W.tpcc_like(lba, N_WRITES)]
+    return list(W.swap_phases(lba, N_WRITES // 2))
+
+
+def _assert_identical(a, b, label: str):
+    np.testing.assert_array_equal(a.app, b.app, err_msg=f"{label}: app")
+    np.testing.assert_array_equal(a.mig, b.mig, err_msg=f"{label}: mig")
+    assert int(a.state["n_erase"]) == int(b.state["n_erase"]), label
+    assert int(a.state["n_mig"]) == int(b.state["n_mig"]), label
+    assert int(a.state["n_dropped"]) == 0, f"{label}: writes dropped"
+    for key, arr in a.state.items():
+        np.testing.assert_array_equal(
+            np.asarray(arr), np.asarray(b.state[key]),
+            err_msg=f"{label}: state[{key}]",
+        )
+    np.testing.assert_array_equal(
+        a.wa_curve(1000), b.wa_curve(1000), err_msg=f"{label}: wa_curve"
+    )
+
+
+class TestBulkGcEquivalence:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.sampled_from(sorted(_MANAGERS)),
+        st.sampled_from(["two_modal", "tpcc", "swap"]),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_bulk_matches_reference_under_jit(self, manager, workload, seed):
+        mcfg = _MANAGERS[manager]()
+        phases = _phases(workload, np.random.default_rng(seed))
+        bulk = M.simulate(GEOM, mcfg, phases, seed=seed, gc_impl="bulk")
+        ref = M.simulate(GEOM, mcfg, phases, seed=seed, gc_impl="reference")
+        _assert_identical(bulk, ref, f"{manager}/{workload}#{seed}")
+
+    def test_bulk_matches_reference_under_vmap(self):
+        """Whole mixed fleet (bloom + non-bloom partitions, a §5.1 sweep
+        drive, multi-phase swap) under both drain implementations."""
+        lba, n = GEOM.lba_pages, N_WRITES
+        specs = [
+            DriveSpec(M.wolf(), (W.two_modal(lba, n),), seed=1),
+            DriveSpec(M.fdp(), (W.two_modal(lba, n),), seed=2),
+            DriveSpec(M.wolf_lru(), (W.tpcc_like(lba, n),), seed=3),
+            DriveSpec(M.wolf(ewma_a=0.6, interval_frac=0.05),
+                      (W.two_modal(lba, n),), seed=4),
+            DriveSpec(M.wolf(), tuple(W.swap_phases(lba, n // 2)), seed=5),
+            DriveSpec(M.wolf_dynamic(), (W.tpcc_like(lba, n),), seed=6),
+        ]
+        bulk = simulate_fleet(GEOM, specs, sampler="numpy", gc_impl="bulk")
+        ref = simulate_fleet(
+            GEOM, specs, sampler="numpy", gc_impl="reference"
+        )
+        np.testing.assert_array_equal(bulk.app, ref.app)
+        np.testing.assert_array_equal(bulk.mig, ref.mig)
+        for i, s in enumerate(specs):
+            for key, arr in bulk.state(i).items():
+                np.testing.assert_array_equal(
+                    np.asarray(arr), np.asarray(ref.state(i)[key]),
+                    err_msg=f"{s.label}: state[{key}]",
+                )
+        np.testing.assert_array_equal(
+            bulk.wa_curves(1000), ref.wa_curves(1000)
+        )
+
+
+class TestBulkGcStructure:
+    def test_no_fori_loop_over_victim_slots(self):
+        """Acceptance bar: the default GC path contains no fori_loop; only
+        the retained reference oracle may."""
+        assert "fori_loop" not in inspect.getsource(S._gc_drain_bulk)
+        assert "fori_loop" not in inspect.getsource(S._gc_one)
+        assert "fori_loop" in inspect.getsource(S._gc_drain_reference)
+
+    def test_default_context_uses_bulk(self):
+        ctx = S.SimContext(GEOM, M.wolf(), 2)
+        assert ctx.gc_impl == "bulk"
+
+    def test_unknown_gc_impl_rejected(self):
+        ctx = S.SimContext(GEOM, M.wolf(), 2, gc_impl="nope")
+        with pytest.raises(AssertionError):
+            S._gc_one(  # asserts on gc_impl before touching any state
+                ctx, None, 0, {}, lambda s, l: 0.0, False
+            )

@@ -32,10 +32,10 @@ def _check_invariants(geom, state):
     assert valid.sum() == geom.lba_pages, "valid-bitmap conservation"
     np.testing.assert_array_equal(valid.sum(1), live, err_msg="live==Σvalid")
     assert (fill >= live).all(), "fill ≥ live"
-    # mapping is a bijection onto valid slots
-    mb = np.asarray(state["map_blk"])
-    ms = np.asarray(state["map_slot"])
-    assert (mb >= 0).all()
+    # the packed mapping is a bijection onto valid slots
+    pm = np.asarray(state["page_map"])
+    assert (pm >= 0).all()
+    mb, ms = pm // geom.pages_per_block, pm % geom.pages_per_block
     assert valid[mb, ms].all(), "every mapped slot is valid"
     sl = np.asarray(state["slot_lba"])
     back = sl[mb, ms]
