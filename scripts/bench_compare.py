@@ -1,0 +1,109 @@
+"""Compare a fresh bench_fleet run against a committed baseline JSON.
+
+    python scripts/bench_compare.py BASELINE.json FRESH.json [--tol 0.25]
+
+Fails (exit 1) when the fresh run regresses by more than ``tol`` in any
+policy×workload cell's loop throughput or in the batched fleet throughput.
+WA columns are reported for context but never gate: they are workload
+statistics, not performance. Cells present on only one side are reported
+and skipped. A baseline taken on a different host/backend (the ``host``
+block, schema v2) downgrades the run to report-only — cross-host
+throughput diffs are apples to oranges.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def compare(base: dict, fresh: dict, tol: float) -> int:
+    gate = True
+    b_host = base.get("host")
+    f_host = fresh.get("host")
+    if b_host != f_host:
+        print(
+            "NOTE: baseline host metadata differs from this host — "
+            "reporting only, not gating."
+        )
+        print(f"  baseline: {b_host}\n  fresh:    {f_host}")
+        gate = False
+    if base.get("mode") != fresh.get("mode"):
+        print(
+            f"NOTE: comparing mode={base.get('mode')!r} baseline against "
+            f"mode={fresh.get('mode')!r} run — write counts differ, so the "
+            "equilibrium mix differs; reporting only, not gating. Cells "
+            "are compile-free per-write rates, so large drops still merit "
+            "a look."
+        )
+        gate = False
+
+    failures = []
+    rows = []
+    key = "steps_per_sec_loop"
+    b_cells, f_cells = base.get("cells", {}), fresh.get("cells", {})
+    min_sec = 0.25  # cells timed faster than this are scheduler noise
+    for name in sorted(set(b_cells) | set(f_cells)):
+        if name not in b_cells or name not in f_cells:
+            rows.append((name, "—", "—", "missing on one side"))
+            continue
+        old, new = b_cells[name][key], f_cells[name][key]
+        ratio = new / old if old else float("inf")
+        flag = ""
+        too_fast = min(
+            b_cells[name].get("sec", min_sec), f_cells[name].get("sec", min_sec)
+        ) < min_sec
+        if ratio < 1.0 - tol:
+            if too_fast:
+                flag = f"ratio {ratio:.2f}x (<{min_sec}s sample, not gated)"
+            else:
+                flag = f"REGRESSION ({ratio:.2f}x)"
+                failures.append(f"{name}: {old:.0f} → {new:.0f} steps/s")
+        rows.append((name, f"{old:.0f}", f"{new:.0f}", flag))
+
+    old_f, new_f = base.get("fleet_steps_per_sec"), fresh.get("fleet_steps_per_sec")
+    if old_f and new_f:
+        ratio = new_f / old_f
+        flag = ""
+        if ratio < 1.0 - tol:
+            flag = f"REGRESSION ({ratio:.2f}x)"
+            failures.append(f"fleet: {old_f:.0f} → {new_f:.0f} steps/s")
+        rows.append(("<batched fleet>", f"{old_f:.0f}", f"{new_f:.0f}", flag))
+
+    w = max(len(r[0]) for r in rows)
+    print(f"{'cell'.ljust(w)}  {'baseline':>10}  {'fresh':>10}")
+    for name, old, new, flag in rows:
+        print(f"{name.ljust(w)}  {old:>10}  {new:>10}  {flag}")
+
+    if failures and gate:
+        print(f"\nFAIL: >{tol:.0%} throughput regression:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nOK: no cell regressed by more than {tol:.0%}"
+          + ("" if gate else " (not gating)"))
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    tol = 0.25
+    if "--tol" in argv:
+        i = argv.index("--tol")
+        if i + 1 >= len(argv):
+            print(__doc__)
+            return 2
+        tol = float(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    args = [a for a in argv if not a.startswith("--")]
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    with open(args[0]) as f:
+        base = json.load(f)
+    with open(args[1]) as f:
+        fresh = json.load(f)
+    return compare(base, fresh, tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,86 @@
+"""Ad-hoc perf probe for the fleet write engine (not part of the suite).
+
+Times simulate_fleet on the bench grid under knob variants. Usage:
+    PYTHONPATH=src:. python scripts/perf_probe.py [writes] [variant ...]
+"""
+
+import os
+import sys
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={os.cpu_count()}"
+    )
+
+import time
+
+from repro.core import fleet as F
+from repro.core.fleet import simulate_fleet
+from repro.core.ssd import Geometry
+
+from benchmarks.bench_fleet import grid_specs
+
+KEY_FULL = F._part_key
+
+# NOTE: coarser partition keys were probe-able before the trace-time
+# detector dispatch; now a sub-batch must be td-homogeneous, so every
+# variant keeps the canonical key and varies only engine/trace knobs.
+VARIANTS = {
+    # name: (fast_path, trace_every, unroll)
+    "ref-fullkey": (False, 1, 1),
+    "split-fullkey": (True, 1, 1),
+    "ref-fullkey-e500": (False, 500, 1),
+    "split-fullkey-e500": (True, 500, 1),
+    "ref-fullkey-e500-u2": (False, 500, 2),
+    "split-fullkey-e500-u4": (True, 500, 4),
+}
+
+
+def main():
+    writes = int(sys.argv[1]) if len(sys.argv) > 1 else 10_000
+    names = sys.argv[2:] or list(VARIANTS)
+    geom = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8)
+    specs = grid_specs(geom, writes, seeds=(0, 1))
+    b = len(specs)
+    for name in names:
+        fast, e, u = VARIANTS[name]
+        kw = dict(sampler="jax", devices="auto", fast_path=fast,
+                  trace_every=e, unroll=u)
+        simulate_fleet(geom, specs, **kw)  # warm the jit cache
+        dts = []
+        for _ in range(3):
+            t0 = time.time()
+            simulate_fleet(geom, specs, **kw)
+            dts.append(time.time() - t0)
+        dt = min(dts)
+        print(f"{name:26s} {b * writes / dt:10.0f} steps/s  "
+              f"(best {dt:.2f}s of {['%.2f' % d for d in dts]})")
+
+
+def per_policy(writes: int = 10_000):
+    """Time each policy as its own 8-drive fleet (seeds 0-1, 4 workloads)."""
+    import benchmarks.bench_fleet as B
+    from repro.core.fleet import simulate_fleet as SF
+
+    geom = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8)
+    for pname, preset in B.POLICIES:
+        specs = [s for s in grid_specs(geom, writes, seeds=(0, 1))
+                 if s.name.startswith(pname + "/")]
+        kw = dict(sampler="jax", devices="auto")
+        SF(geom, specs, **kw)
+        dts = []
+        for _ in range(3):
+            t0 = time.time()
+            SF(geom, specs, **kw)
+            dts.append(time.time() - t0)
+        dt = min(dts)
+        print(f"{pname:14s} {len(specs)} drives  "
+              f"{len(specs) * writes / dt:10.0f} steps/s  ({dt:.2f}s)")
+
+
+if __name__ == "__main__":
+    if "--per-policy" in sys.argv:
+        per_policy(int(sys.argv[1]) if sys.argv[1:2] and sys.argv[1].isdigit() else 10_000)
+    else:
+        main()

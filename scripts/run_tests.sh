@@ -4,6 +4,9 @@
 #   scripts/run_tests.sh                # full suite
 #   scripts/run_tests.sh --fast         # skip @pytest.mark.slow (multi-minute kernel sweeps)
 #   scripts/run_tests.sh --bench-smoke  # reduced fleet benchmark → BENCH_fleet.json
+#   scripts/run_tests.sh --bench-compare  # fresh smoke run diffed against the
+#                                         # committed BENCH_fleet.json; fails on
+#                                         # >25% throughput regression per cell
 #   scripts/run_tests.sh <pytest args...>   # passed through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,6 +19,21 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # (steps/sec per cell) for PR-over-PR comparison
     export PYTHONPATH=".:${PYTHONPATH}"
     exec python benchmarks/bench_fleet.py --smoke
+fi
+
+if [[ "${1:-}" == "--bench-compare" ]]; then
+    # regression gate: run the smoke grid to a scratch file (the committed
+    # baselines are left untouched) and diff per-cell throughput against
+    # the committed SMOKE baseline (same mode ⇒ same write counts ⇒ the
+    # 25% gate is meaningful); falls back to the default-mode headline
+    # JSON (report-only: bench_compare does not gate across modes)
+    export PYTHONPATH=".:${PYTHONPATH}"
+    fresh="$(mktemp /tmp/bench_fleet.XXXXXX.json)"
+    trap 'rm -f "$fresh"' EXIT
+    python benchmarks/bench_fleet.py --smoke --out "$fresh"
+    baseline=BENCH_fleet_smoke.json
+    [[ -f "$baseline" ]] || baseline=BENCH_fleet.json
+    exec python scripts/bench_compare.py "$baseline" "$fresh" --tol 0.25
 fi
 
 args=()

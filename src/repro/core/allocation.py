@@ -63,7 +63,11 @@ def _delta_from_ratio(r: jax.Array) -> jax.Array:
         too_low = op_ratio_from_delta(mid) < r
         return jnp.where(too_low, mid, lo), jnp.where(too_low, hi, mid)
 
-    lo, hi = jax.lax.fori_loop(0, 80, body, (lo, hi))
+    # unroll: the body is a handful of [G]-sized ops, so on XLA:CPU the
+    # loop-iteration overhead dominates; 80 bisection steps are kept for
+    # bit-stable convergence (float32 lo/hi only reach their fixed point
+    # near iteration ~60 on adversarial ratios)
+    lo, hi = jax.lax.fori_loop(0, 80, body, (lo, hi), unroll=8)
     return 0.5 * (lo + hi)
 
 

@@ -13,11 +13,13 @@ host work is O(B) setup, not O(B·T) sampling.
 
 Two execution details that matter on real hardware:
 
-* Drives are partitioned into at most two sub-batches by whether they carry
-  the §5.6 bloom detector: a vmapped ``lax.cond`` lowers to a select over
-  both branches, so keeping the (G × bits) filter pair out of non-bloom
-  drives' compiled step removes per-step full-filter selects (and the
-  state memory) for the common case.
+* Drives are partitioned into sub-batches by step STRUCTURE — the
+  (bloom detector, can-demote, movement-ops) key of :func:`_part_key`:
+  a vmapped ``lax.cond`` lowers to a select over both branches, so any
+  machinery one drive of a sub-batch carries is machinery every drive of
+  that sub-batch executes per step. Partitioning keeps the (G × bits)
+  bloom filter pair, the §5.6 GC-demotion scan, and the movement-op
+  second drain out of the compiled step of drives that can never use them.
 * ``devices=`` shards each sub-batch across the host's JAX devices with
   ``pmap(vmap(...))`` — on CPU, spawn virtual devices via
   ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* importing
@@ -39,7 +41,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.managers import RunResult, build_drive
-from repro.core.simulator import SimContext, make_step, policy_from_config
+from repro.core.simulator import (
+    SimContext,
+    make_step,
+    policy_from_config,
+    scan_writes,
+)
 from repro.core.ssd import Geometry, ManagerConfig, SimState
 from repro.core.workloads import Phase, phase_param_arrays, sample_phases_device
 
@@ -50,7 +57,7 @@ from repro.core.workloads import Phase, phase_param_arrays, sample_phases_device
 _SHARED_FIELDS = (
     "q_create", "w_intervals",
     "cold_hit_rate_frac", "cold_op_frac", "gc_reserve_blocks",
-    "bloom_bits_per_page",
+    "bloom_bits_per_page", "valve_max_tries", "bloom_rotate_min_writes",
 )
 
 
@@ -70,13 +77,14 @@ class DriveSpec:
 
 @dataclasses.dataclass
 class FleetResult:
-    app: np.ndarray  # [B, T] cumulative application writes
-    mig: np.ndarray  # [B, T] cumulative migrations
+    app: np.ndarray  # [B, T // trace_every] cumulative application writes
+    mig: np.ndarray  # [B, T // trace_every] cumulative migrations
     specs: list[DriveSpec]
     # (original drive indices, stacked SimState pytree) per sub-batch
     shards: list[tuple[list[int], SimState]]
     lbas: np.ndarray | None = None  # [B, T] when return_lbas=True
     geom: Geometry | None = None  # shared fleet geometry (analytics)
+    trace_every: int = 1  # trace stride (RunResult.stride of every drive)
 
     def state(self, i: int) -> SimState:
         """Final state pytree of drive i."""
@@ -95,7 +103,9 @@ class FleetResult:
 
     def result(self, i: int) -> RunResult:
         """Per-drive view with the single-drive RunResult API."""
-        return RunResult(self.app[i], self.mig[i], self.state(i))
+        return RunResult(
+            self.app[i], self.mig[i], self.state(i), stride=self.trace_every
+        )
 
     @property
     def wa_total(self) -> np.ndarray:
@@ -167,6 +177,26 @@ def _stack(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def _part_key(s: DriveSpec) -> tuple[str, bool, bool, bool]:
+    """Sub-batch partition key: step STRUCTURE a drive's compiled scan must
+    carry. A vmapped lax.cond lowers to a select over both branches, so
+    machinery any drive of a sub-batch carries is machinery every drive of
+    that sub-batch executes per step. Keying on (detector, movement ops,
+    dynamic groups, closed-form allocation) keeps the [G, bits] filter
+    pair and §5.6 demotion machinery out of static-detector drives, the
+    movement-op compaction (a second full GC drain per step) out of
+    fdp/single-style drives, and the §5.2/eq.-8 interval machinery (two
+    argsorts + an 80-iteration bisection per interval) out of drives that
+    never run it. The detector is part of the key, so every sub-batch is
+    td-homogeneous and the simulator dispatches it at trace time."""
+    return (
+        s.mcfg.td_mode,
+        s.mcfg.movement_ops,
+        s.mcfg.dynamic_groups,
+        s.mcfg.alloc_mode in ("wolf", "optimal", "fdp_assumed"),
+    )
+
+
 @functools.lru_cache(maxsize=64)
 def _shard_runner(ctx: SimContext, n_total: int, on_device_sampler: bool,
                   n_dev: int):
@@ -188,7 +218,7 @@ def _shard_runner(ctx: SimContext, n_total: int, on_device_sampler: bool,
 
         step = make_step(ctx, policy, rate_fn)
         ts = jnp.arange(n_total, dtype=jnp.int32)  # shared write clock
-        st, trace = jax.lax.scan(step, st, (lbas, ts))
+        st, trace = scan_writes(ctx, step, st, lbas, ts)
         return st, trace, lbas
 
     batched = jax.vmap(run_one)
@@ -218,6 +248,9 @@ def simulate_fleet(
     return_lbas: bool = False,
     devices: int | str | None = None,
     gc_impl: str = "bulk",
+    fast_path: bool = False,
+    trace_every: int = 1,
+    unroll: int = 1,
 ) -> FleetResult:
     """Run B independent drives in a single jitted vmap(lax.scan).
 
@@ -234,6 +267,16 @@ def simulate_fleet(
     SimContext — the bulk-vs-reference equivalence suite runs whole fleets
     under both.
 
+    fast_path: step engine. The fleet default is the single-path step
+    (False): under vmap a lax.cond executes BOTH branches and selects, so
+    the split engine's lean branch is pure extra work here — it pays off
+    under plain jit (managers.simulate, accelerator per-core scans), where
+    the heavy tail is a real untaken branch. Both engines are elementwise-
+    identical (tests/test_write_engine.py), so this is a pure scheduling
+    knob. trace_every / unroll: trace stride and scan unroll
+    (simulator.scan_writes); trace_every must divide n_total, and app/mig
+    come back [B, n_total // trace_every].
+
     Every spec must issue the same total number of writes (one shared scan).
     """
     assert specs, "empty fleet"
@@ -242,6 +285,7 @@ def simulate_fleet(
     totals = {sum(ph.n_writes for ph in s.phases) for s in specs}
     assert len(totals) == 1, f"drives must issue equal write totals: {totals}"
     n_total = totals.pop()
+    assert n_total % trace_every == 0, (n_total, trace_every)
     base = specs[0].mcfg
     for s in specs:
         for f in _SHARED_FIELDS:
@@ -258,20 +302,20 @@ def simulate_fleet(
     p_max = max(len(s.phases) for s in specs)
     g_wl = max(len(ph.sizes) for s in specs for ph in s.phases)
 
-    # partition by detector: the bloom branch (and its [G, bits] filters)
-    # only exists in the sub-batch that needs it
-    partitions: list[tuple[bool, list[int]]] = []
-    for use_bloom in (False, True):
-        idx = [i for i, s in enumerate(specs)
-               if (s.mcfg.td_mode == "bloom") == use_bloom]
-        if idx:
-            partitions.append((use_bloom, idx))
+    partitions: list[tuple[tuple, list[int]]] = []
+    for key in sorted({_part_key(s) for s in specs}):
+        partitions.append(
+            (key, [i for i, s in enumerate(specs) if _part_key(s) == key])
+        )
 
-    app = np.zeros((len(specs), n_total), np.int32)
-    mig = np.zeros((len(specs), n_total), np.int32)
+    n_trace = n_total // trace_every
+    app = np.zeros((len(specs), n_trace), np.int32)
+    mig = np.zeros((len(specs), n_trace), np.int32)
     lbas_out = np.zeros((len(specs), n_total), np.int32) if return_lbas else None
     shards = []
-    for use_bloom, idx in partitions:
+    for (td_mode, use_movement, use_dynamic, use_closed), idx in partitions:
+        use_bloom = td_mode == "bloom"
+        can_demote = td_mode != "static"
         sub = [specs[i] for i in idx]
         # group-cap padding is PER PARTITION: bloom filter width scales with
         # 1/max_groups, so padding a bloom drive beyond its sub-batch's own
@@ -295,6 +339,8 @@ def simulate_fleet(
             ctx_d = SimContext(
                 geom, dataclasses.replace(s.mcfg, max_groups=g_max),
                 n_groups, use_bloom=use_bloom,
+                use_movement=use_movement, can_demote=can_demote,
+                use_dynamic=use_dynamic, use_closed_alloc=use_closed,
             )
             policy = policy_from_config(ctx_d, assumed_p, fdp_rate)
             # the drive keeps its OWN dynamic-group cap in the padded arrays
@@ -329,15 +375,28 @@ def simulate_fleet(
         ctx = SimContext(
             geom,
             # the shared ctx keeps the SUB-BATCH's interval_frac so ctx.h
-            # (the scalar predicate) is exact on the homogeneous fast path
+            # (the scalar predicate) is exact on the homogeneous fast path;
+            # td_mode/movement/dynamic/alloc mirror the partition key (the
+            # simulator dispatches the detector and the interval machinery
+            # from these statics at trace time)
             dataclasses.replace(
                 base, name="fleet", max_groups=g_max,
                 interval_frac=sub[0].mcfg.interval_frac,
+                movement_ops=use_movement, td_mode=td_mode,
+                dynamic_groups=use_dynamic,
+                alloc_mode=sub[0].mcfg.alloc_mode,
             ),
             n_groups_max,
             use_bloom=use_bloom,
             gc_impl=gc_impl,
             per_drive_interval=per_drive_interval,
+            fast_path=fast_path,
+            use_movement=use_movement,
+            can_demote=can_demote,
+            use_dynamic=use_dynamic,
+            use_closed_alloc=use_closed,
+            trace_every=trace_every,
+            unroll=unroll,
         )
         args = (
             _stack(sts),
@@ -366,5 +425,5 @@ def simulate_fleet(
 
     return FleetResult(
         app=app, mig=mig, specs=list(specs), shards=shards, lbas=lbas_out,
-        geom=geom,
+        geom=geom, trace_every=trace_every,
     )

@@ -63,17 +63,34 @@ class RunResult:
     app: np.ndarray  # cumulative application writes
     mig: np.ndarray  # cumulative migrations
     state: dict
+    # trace stride: element j covers writes up to step (j+1)·stride - 1
+    # (1 = dense per-write trace; see simulator.scan_writes)
+    stride: int = 1
 
     @property
     def wa_total(self) -> float:
         return float((self.app[-1] + self.mig[-1]) / max(self.app[-1], 1))
 
     def wa_curve(self, window: int = 2000) -> np.ndarray:
-        """Windowed WA over time: (Δapp+Δmig)/Δapp per window."""
+        """Windowed WA over time: (Δapp+Δmig)/Δapp per window.
+
+        ``window`` counts WRITES, not trace elements, so curves from runs
+        with different trace strides are comparable — window k covers
+        writes (k·window, (k+1)·window], boundaries the strided trace
+        samples exactly (window must be a multiple of the stride; a
+        stride-E trace at element j equals the dense trace at step
+        (j+1)·E - 1, so curves agree elementwise across strides).
+        """
+        assert window % self.stride == 0, (window, self.stride)
+        w = window // self.stride
         app, mig = self.app, self.mig
-        idx = np.arange(window, len(app), window)
-        d_app = app[idx] - app[idx - window]
-        d_mig = mig[idx] - mig[idx - window]
+        # boundaries AFTER k·window writes: trace elements k·w - 1; the
+        # first window's left boundary is the (virtual) zero sample before
+        # any write, so the burn-in window is included
+        idx = np.arange(w, len(app) + 1, w) - 1
+        prev = np.maximum(idx - w, -1)
+        d_app = app[idx] - np.where(prev >= 0, app[prev], 0)
+        d_mig = mig[idx] - np.where(prev >= 0, mig[prev], 0)
         return np.where(d_app > 0, (d_app + d_mig) / np.maximum(d_app, 1), 1.0)
 
 
@@ -149,11 +166,18 @@ def simulate(
     seed: int = 0,
     init_p_from_phase: bool = True,
     gc_impl: str = "bulk",
+    fast_path: bool = True,
+    trace_every: int = 1,
+    unroll: int = 1,
 ) -> RunResult:
     """Run a (possibly multi-phase) workload under a manager preset.
 
     gc_impl: "bulk" (vectorized drain, default) or "reference" (the
     per-page oracle) — tests/test_bulk_gc.py asserts they agree.
+    fast_path: False selects the seed-shaped single-path step
+    (tests/test_write_engine.py asserts it agrees with the split engine).
+    trace_every / unroll: trace stride and scan unroll factor
+    (simulator.scan_writes); trace_every must divide every phase length.
     """
     rng = np.random.default_rng(seed)
     st, n_groups, assumed_p, fdp_rate, page_rates = build_drive(
@@ -161,7 +185,12 @@ def simulate(
     )
     ctx = SimContext(
         geom, mcfg, n_groups, use_bloom=mcfg.td_mode == "bloom",
-        gc_impl=gc_impl,
+        gc_impl=gc_impl, fast_path=fast_path,
+        use_movement=mcfg.movement_ops,
+        can_demote=mcfg.td_mode != "static",
+        use_dynamic=mcfg.dynamic_groups,
+        use_closed_alloc=mcfg.alloc_mode in ("wolf", "optimal", "fdp_assumed"),
+        trace_every=trace_every, unroll=unroll,
     )
     apps, migs = [], []
     for phase, page_rate in zip(phases, page_rates):
@@ -172,4 +201,6 @@ def simulate(
         )
         apps.append(np.asarray(trace["app"]))
         migs.append(np.asarray(trace["mig"]))
-    return RunResult(np.concatenate(apps), np.concatenate(migs), st)
+    return RunResult(
+        np.concatenate(apps), np.concatenate(migs), st, stride=trace_every
+    )

@@ -11,6 +11,41 @@ One scan step = one application write:
   6. movement operations (§5.3): ≤1 proactive compaction GC per step on the
      most block-surplus group, donating redeemed blocks to the pool.
 
+Architecture (post fast-path refactor — see also the bulk-GC notes below):
+
+* **O(1) incremental accounting.** The paper treats pool occupancy and
+  per-group budgets as counters, and so does the simulator: ``SimState``
+  carries ``free_blocks`` (a scalar, == ``(state == FREE).sum()`` always)
+  and ``grp_surplus`` (``grp_phys - grp_alloc`` masked to active groups),
+  maintained at the handful of sites that change block state
+  (:func:`_pop_free_block`, the two GC drains, :func:`_recompute_alloc`,
+  group create/merge). Every per-write predicate — the GC low-pool check,
+  the emergency valve, movement-op headroom — is an O(1) scalar read; full
+  reductions over the block array survive only inside per-GC victim
+  selection and ``SimState.check_invariants`` (the debug checker that
+  proves the counters never drift).
+
+* **Fast path / heavy path.** ``make_step`` splits the write into a lean
+  fast path — invalidate counters, pick the target group, append to the
+  group's open active block through the fused ``kernels/write_path`` op
+  (Pallas on TPU, flat gather/scatter lowering elsewhere) — and a heavy
+  path (GC, emergency valve, movement ops, §5.1 interval bookkeeping)
+  entered only when the scalar predicates demand it: the active block is
+  full, the pool is at reserve, a group holds redeemable surplus, or the
+  interval elapses. GC is a rare event amortized over many steady-state
+  writes (cf. Nagel et al., arXiv:1807.09313); under plain jit the heavy
+  machinery is a real untaken branch on most writes. The seed-shaped
+  single-path step survives as ``SimContext.fast_path=False`` and is the
+  step-equivalence oracle (tests/test_write_engine.py).
+
+* **Chunked scan + strided tracing.** :func:`scan_writes` scans chunks of
+  ``trace_every`` writes (inner scan ``unroll``-ed) and emits the
+  cumulative (n_app, n_mig) counters once per chunk instead of per write —
+  the trace at stride E samples exactly the dense trace at steps E, 2E, …
+  Write-order semantics are untouched: chunking only regroups scan
+  iterations, every write still sees the state its predecessors left.
+  Dense tracing (``trace_every=1``) is the default everywhere.
+
 Architecture (post bulk-GC refactor):
 
 * **State** is a :class:`repro.core.ssd.SimState` — a frozen dataclass
@@ -40,17 +75,26 @@ Architecture (post bulk-GC refactor):
   :func:`_gc_drain_reference` (``SimContext.gc_impl="reference"``) and is
   asserted elementwise-identical in tests/test_bulk_gc.py.
 
-* **Policy switches are traced data.** Allocation mode, GC policy, detector,
-  movement/dynamic flags — and, since this refactor, the §5.1 constants
-  ``ewma_a`` and the interval length ``h`` — live in a per-drive ``policy``
-  pytree of scalars/vectors selected with ``lax.cond``/``lax.switch``. Under
-  plain jit the predicates stay runtime branches; under ``jax.vmap`` they
-  lower to selects, which is what lets ``core/fleet.py`` batch drives with
-  *different* manager configs (now including EWMA/interval sweeps) into one
-  jitted ``vmap(lax.scan)``. When every drive of a fleet shares ``h``, the
-  interval predicate stays a scalar (``SimContext.per_drive_interval=False``)
-  so the §5.1 bookkeeping remains a real every-h-steps branch, not a
-  per-step select.
+* **Policy switches: traced data where drives differ, trace-time structure
+  where they can't.** GC policy (greedy/LRU), movement firing, FDP
+  assumption arrays, and the §5.1 constants ``ewma_a``/``h`` live in a
+  per-drive ``policy`` pytree of scalars selected with ``lax.cond`` —
+  under jit they are runtime branches, under ``jax.vmap`` selects, which
+  is what lets ``core/fleet.py`` batch drives with different manager
+  configs (including EWMA/interval sweeps) into one jitted
+  ``vmap(lax.scan)``. But switches that define step STRUCTURE — the
+  temperature detector, movement ops, dynamic groups, closed-form
+  allocation — dispatch at TRACE time from ``SimContext``
+  (``can_demote``/``use_movement``/``use_dynamic``/``use_closed_alloc``):
+  a vmapped ``lax.switch`` executes every branch and selects, so
+  ``core/fleet.py`` partitions fleets into structure-homogeneous
+  sub-batches (``fleet._part_key``) and each compiled step carries only
+  the machinery its drives can ever run. Conditionals that remain are
+  SELECT-DIETED (``_cond_fields``): their branches return only the fields
+  they can modify, never the whole ~29-array state pytree. When every
+  drive of a fleet shares ``h``, the interval predicate stays a scalar
+  (``SimContext.per_drive_interval=False``) so the §5.1 bookkeeping
+  remains a real every-h-steps branch, not a per-step select.
 
 GC migrations re-enter the same write semantics (so migrated pages can be
 demoted by the detector, as in Listing 1/3 of the paper).
@@ -77,8 +121,10 @@ from repro.core.ssd import (
     ManagerConfig,
     SimState,
     bloom_bits,
+    surplus_of,
 )
 from repro.kernels.gc_compact.ops import compact_slots
+from repro.kernels.write_path.ops import apply_write
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -122,6 +168,28 @@ class SimContext:
     # under vmap turns the interval machinery into per-step selects — only
     # fleets actually sweeping the interval length pay that
     per_drive_interval: bool = False
+    # step engine: True = fast-path/heavy-path split (default); False = the
+    # seed-shaped single-path step, kept as the step-equivalence oracle
+    fast_path: bool = True
+    # static because they gate traced STRUCTURE (like use_bloom): when False
+    # the movement-op / §5.6-demotion / §5.2-dynamic-group / closed-form-
+    # allocation machinery is structurally absent from the compiled step,
+    # so vmapped fleets whose sub-batch can't need it never pay its
+    # per-step (or per-interval) cost. core/fleet.py partitions on these.
+    use_movement: bool = True
+    can_demote: bool = True
+    use_dynamic: bool = True
+    # the eq.-8 closed-form OP allocation embeds an 80-iteration bisection
+    # (analytics eq. 3 inversion) per §5.1 interval; size/freq-allocated
+    # drives never read its result
+    use_closed_alloc: bool = True
+    # trace stride: emit the cumulative (n_app, n_mig) counters after every
+    # E-th write instead of every write (must divide the segment length);
+    # the scan is then chunked [T//E, E] and the inner chunk emits nothing
+    trace_every: int = 1
+    # lax.scan unroll factor for the (inner) write loop — amortizes
+    # XLA:CPU per-iteration dispatch; semantics-free
+    unroll: int = 1
 
     @property
     def h(self) -> int:
@@ -145,6 +213,18 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
     assert ctx.use_bloom or ctx.mcfg.td_mode != "bloom", (
         "bloom detector requested but ctx.use_bloom is False"
     )
+    assert ctx.use_movement or not ctx.mcfg.movement_ops, (
+        "movement ops requested but ctx.use_movement is False"
+    )
+    assert ctx.can_demote or ctx.mcfg.td_mode == "static", (
+        f"detector {ctx.mcfg.td_mode!r} can demote but ctx.can_demote is False"
+    )
+    assert ctx.use_dynamic or not ctx.mcfg.dynamic_groups, (
+        "dynamic groups requested but ctx.use_dynamic is False"
+    )
+    assert ctx.use_closed_alloc or ctx.mcfg.alloc_mode not in (
+        "wolf", "optimal", "fdp_assumed"
+    ), f"alloc {ctx.mcfg.alloc_mode!r} needs the closed form"
     return {
         "alloc_mode": jnp.asarray(_ALLOC_CODES[ctx.mcfg.alloc_mode], jnp.int32),
         "gc_lru": jnp.asarray(ctx.mcfg.gc_policy == "lru"),
@@ -164,6 +244,86 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# select-dieted conditionals
+# ---------------------------------------------------------------------------
+#
+# Under vmap a lax.cond lowers to a select over its OUTPUTS; a branch that
+# returns the whole SimState therefore copies all ~29 state arrays per
+# step per lane — including the [G, bits] bloom filter pair that GC never
+# writes. Every per-step conditional below routes through _cond_fields /
+# _while_fields, which carry ONLY the fields the true branch can modify;
+# the rest ride through the enclosing closure untouched. Under plain jit
+# this is the same real branch either way.
+
+# every field any GC drain (bulk or reference) can touch
+_GC_FIELDS = (
+    "page_map", "slot_lba", "valid", "live", "fill", "stamp", "state",
+    "group_of", "active_blk", "grp_size", "grp_phys", "grp_surplus",
+    "free_blocks", "clock", "n_mig", "n_dropped", "n_erase",
+)
+# fields the in-write block allocation (_pop_free_block + seal) can touch
+_ALLOC_FIELDS = (
+    "state", "group_of", "fill", "grp_phys", "grp_surplus", "free_blocks",
+    "stamp", "clock", "active_blk",
+)
+# fields the §5.1 interval update (EWMA + create/merge + re-allocation)
+# can touch — group stats plus the block relabel/seal of a merge
+_INTERVAL_FIELDS = (
+    "grp_p", "grp_writes", "interval", "cooldown", "grp_active",
+    "grp_size", "grp_phys", "grp_alloc", "grp_surplus", "grp_created",
+    "group_of", "state", "active_blk",
+)
+# everything the post-target-selection write step (fast append OR the whole
+# heavy tail) can touch: all state except the bloom filter triple, which
+# only target selection writes
+_STEP_FIELDS = tuple(
+    f for f in SimState.__dataclass_fields__
+    if f not in ("bloom_active", "bloom_passive", "bloom_writes")
+)
+
+
+def _fields_of(st: SimState, fields):
+    return tuple(getattr(st, f) for f in fields)
+
+
+def _cond_fields(pred, fn, st: SimState, fields):
+    """``st if not pred else fn(st)``, selecting only over ``fields``.
+
+    ``fn`` must not modify any field outside ``fields`` (the others are
+    silently dropped from its result — keep the lists exhaustive).
+    """
+    out = jax.lax.cond(
+        pred,
+        lambda s: _fields_of(fn(s), fields),
+        lambda s: _fields_of(s, fields),
+        st,
+    )
+    return st.replace(**dict(zip(fields, out)))
+
+
+def _while_fields(cond_fn, body_fn, st: SimState, extra, fields):
+    """A bounded while_loop whose carry is (fields-of-st, extra) instead of
+    the whole state — fields outside ``fields`` must be loop-invariant.
+    cond_fn/body_fn take and return (full-state, extra)."""
+
+    def rebuild(carry):
+        vals, extra = carry
+        return st.replace(**dict(zip(fields, vals))), extra
+
+    def cond(carry):
+        return cond_fn(*rebuild(carry))
+
+    def body(carry):
+        s2, e2 = body_fn(*rebuild(carry))
+        return _fields_of(s2, fields), e2
+
+    vals, extra = jax.lax.while_loop(
+        cond, body, (_fields_of(st, fields), extra)
+    )
+    return st.replace(**dict(zip(fields, vals))), extra
+
+
+# ---------------------------------------------------------------------------
 # primitive state updates
 # ---------------------------------------------------------------------------
 
@@ -172,16 +332,20 @@ def _pop_free_block(st: SimState, g):
     free_mask = st.state == FREE
     blk = jnp.argmax(free_mask)  # reserve logic upstream guarantees ≥1
     ok = free_mask[blk]
+    d = jnp.where(ok, 1, 0)
+    grp_phys = st.grp_phys.at[g].add(d)
     st = st.replace(
         state=st.state.at[blk].set(jnp.where(ok, OPEN, st.state[blk])),
         group_of=st.group_of.at[blk].set(jnp.where(ok, g, st.group_of[blk])),
         fill=st.fill.at[blk].set(jnp.where(ok, 0, st.fill[blk])),
-        grp_phys=st.grp_phys.at[g].add(jnp.where(ok, 1, 0)),
+        grp_phys=grp_phys,
+        grp_surplus=surplus_of(st.grp_active, grp_phys, st.grp_alloc),
+        free_blocks=st.free_blocks - d,
         # LRU clock: a block's age is its claim time — "least recently
         # erased" degenerates into cleaning freshly-filled (never-erased)
         # blocks if ages only advance on erase.
         stamp=st.stamp.at[blk].set(jnp.where(ok, st.clock, st.stamp[blk])),
-        clock=st.clock + jnp.where(ok, 1, 0),
+        clock=st.clock + d,
     )
     return st, blk, ok
 
@@ -212,7 +376,7 @@ def _write_page(ctx: SimContext, st: SimState, lba, g, *, is_migration: bool,
             active_blk=st.active_blk.at[g].set(jnp.where(ok, new_blk, old))
         )
 
-    st = jax.lax.cond(blk_full & enabled, alloc, lambda s: s, st)
+    st = _cond_fields(blk_full & enabled, alloc, st, _ALLOC_FIELDS)
     blk = st.active_blk[g]
     slot = st.fill[blk]
     # overflow guard: if the pool was empty the active block may still be
@@ -263,6 +427,43 @@ def _invalidate(ctx: SimContext, st: SimState, lba):
     return st, jnp.where(has, old_g, 0)
 
 
+def _invalidate_counts(ctx: SimContext, st: SimState, lba):
+    """The counter half of :func:`_invalidate`: live/grp_size decrements and
+    the old-group lookup, WITHOUT the valid-bit clear.
+
+    The fast-path step defers the clear into the fused ``write_path`` op
+    (heavy steps apply it via :func:`_clear_valid` before any GC runs).
+    Nothing between here and there reads ``valid`` — target selection only
+    touches group stats and the bloom pair — so the split is exact.
+    Returns (st, old_g, old_pm).
+    """
+    b = ctx.geom.pages_per_block
+    pm = st.page_map[lba]
+    has = pm >= 0
+    pm_c = jnp.maximum(pm, 0)
+    old_g = st.group_of[pm_c // b]
+    st = st.replace(
+        live=st.live.at[pm_c // b].add(jnp.where(has, -1, 0)),
+        grp_size=st.grp_size.at[jnp.maximum(old_g, 0)].add(
+            jnp.where(has & (old_g >= 0), -1, 0)
+        ),
+    )
+    return st, jnp.where(has, old_g, 0), pm
+
+
+def _clear_valid(ctx: SimContext, st: SimState, pm):
+    """Complete a deferred invalidate: clear the old slot's valid bit."""
+    b = ctx.geom.pages_per_block
+    has = pm >= 0
+    pm_c = jnp.maximum(pm, 0)
+    blk_c, slot = pm_c // b, pm_c % b
+    return st.replace(
+        valid=st.valid.at[blk_c, slot].set(
+            jnp.where(has, False, st.valid[blk_c, slot])
+        )
+    )
+
+
 # ---------------------------------------------------------------------------
 # garbage collection (one victim) — §5.4
 # ---------------------------------------------------------------------------
@@ -303,29 +504,26 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
     # A GC demotion only ever moves a page one group colder, and whether a
     # page is demotion-eligible depends solely on drain-invariant state
     # (oracle rates, fdp bands, the bloom filter pair) — so it precomputes
-    # as one [B] mask. Keeping the big state arrays out of the per-slot
-    # machinery below matters: anything a lax.scan/switch touches is hauled
-    # through the loop boundary every iteration on XLA:CPU.
-    def static_flags(lbas_c):
-        return jnp.zeros(b, bool)
-
-    def fdp_flags(lbas_c):
+    # as one [B] mask, for the trace-time-dispatched detector only (every
+    # compiled step has exactly one). Keeping the big state arrays out of
+    # the per-slot machinery below matters: anything a lax.scan touches is
+    # hauled through the loop boundary every iteration on XLA:CPU.
+    td = ctx.mcfg.td_mode
+    if td == "fdp" and ctx.can_demote:
         r = jax.vmap(lambda l: rate_fn(st, l))(lbas_c)
-        return r < 0.5 * policy["fdp_rate"][g]
-
-    def bloom_flags(lbas_c):
+        demote_flag = r < 0.5 * policy["fdp_rate"][g]
+    elif td == "bloom" and ctx.can_demote:
         in_a = jax.vmap(
             lambda l: _bloom_query(ctx, st.bloom_active, l, g)
         )(lbas_c)
         in_p = jax.vmap(
             lambda l: _bloom_query(ctx, st.bloom_passive, l, g)
         )(lbas_c)
-        return ~in_a & ~in_p
-
-    flag_branches = [static_flags, fdp_flags]
-    if ctx.use_bloom:
-        flag_branches.append(bloom_flags)
-    demote_flag = jax.lax.switch(policy["td_mode"], flag_branches, lbas_c)
+        demote_flag = ~in_a & ~in_p
+    else:
+        # static detector: pages never change temperature during GC, so
+        # the whole flags/targets machinery below is structurally absent
+        demote_flag = jnp.zeros(b, bool)
 
     # -- per-slot target groups, exact sequential semantics. A demoted page
     # lands one group colder BY CURRENT HIT-RATE ORDER, and hit rates
@@ -343,47 +541,35 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
     def scan_targets(_):
         def body(gs, xs):
             flag, live = xs
-            # _hit_rates over the drifted sizes, [G]-sized
+            # _hit_rates over the drifted sizes, [G]-sized; the
+            # next-colder neighbor comes from the shared reduction helper
+            # (== _sgv_neighbors' stable argsort; no sort — a batched
+            # XLA:CPU sort 16×/drain dominates the drain)
             hr = jnp.where(
                 grp_active,
                 grp_p / jnp.maximum(gs.astype(jnp.float32), 1.0),
                 -1.0,
             )
-            # next-colder ACTIVE group by current hit-rate order — the
-            # reductions replicate _sgv_neighbors' stable argsort (ties
-            # break by index): the candidate set is every active group
-            # strictly after g in (-hr, index) lexicographic order, and
-            # the neighbor is its (max hr, then min index) element. No
-            # sort: a batched XLA:CPU sort 16×/drain dominates the drain.
-            hr_g = hr[g]
-            cand = grp_active & (
-                (hr < hr_g) | ((hr == hr_g) & (arange_g > g32))
-            )
-            best_hr = jnp.max(jnp.where(cand, hr, -2.0))
-            nb = jnp.min(
-                jnp.where(cand & (hr == best_hr), arange_g, g_max)
-            )
-            # empty candidate set: an active g is already the coldest and
-            # stays put; an inactive g (post-merge corner) falls to the
-            # coldest active — exactly argsort's clip(rank+1, n_active-1)
-            cold_hr = jnp.min(jnp.where(grp_active, hr, jnp.inf))
-            coldest = jnp.max(
-                jnp.where(grp_active & (hr == cold_hr), arange_g, -1)
-            )
-            fallback = jnp.where(grp_active[g], g32, coldest)
-            nb = jnp.where(jnp.any(cand), nb, fallback)
+            nb = _neighbor_colder(hr, grp_active, g32, g_known_active=True)
             t = jnp.where(flag & live, nb, g32).astype(jnp.int32)
             gs = gs.at[g].add(jnp.where(live, -1, 0)).at[t].add(
                 jnp.where(live, 1, 0)
             )
             return gs, t
 
-        _, ts = jax.lax.scan(body, st.grp_size, (demote_flag, is_live))
+        # full unroll: B is small and static; the scan-loop overhead on
+        # XLA:CPU would otherwise dominate the tiny [G]-sized body
+        _, ts = jax.lax.scan(
+            body, st.grp_size, (demote_flag, is_live), unroll=b
+        )
         return ts
 
-    targets = jax.lax.cond(
-        jnp.any(demote_flag & is_live), scan_targets, const_targets, 0
-    )
+    if ctx.can_demote:
+        targets = jax.lax.cond(
+            jnp.any(demote_flag & is_live), scan_targets, const_targets, 0
+        )
+    else:
+        targets = const_targets(0)
     t_live = jnp.where(is_live, targets, g_max)  # dead rows → masked out
 
     # NOTE on lowering: XLA:CPU's scatter expander rewrites every multi-row
@@ -428,7 +614,7 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
         claim[None, :] & (claim_pos[None, :] < claim_pos[:, None]), axis=1
     )
     free_mask = st.state == FREE
-    n_free = jnp.sum(free_mask)
+    n_free = st.free_blocks  # carried scalar == sum(free_mask), invariant
     # free_by_rank[r] = r-th lowest FREE block index (what the sequential
     # argmax-pop hands out); an XLA:CPU sort here would cost ~100µs/drain
     frank = jnp.cumsum(free_mask) - 1  # free-rank of each free block
@@ -471,7 +657,8 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
         jnp.sum(claim_onehot * (st.clock + claim_rank)[None, :], axis=1),
         st.stamp,
     )
-    clock = st.clock + jnp.sum(claim_ok)
+    n_claimed = jnp.sum(claim_ok)
+    clock = st.clock + n_claimed
     grp_phys = st.grp_phys + claim_ok.astype(jnp.int32)
     active_blk = jnp.where(claim_ok, new_blk, ab)
 
@@ -498,6 +685,7 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
     )
 
     # -- erase the victim ---------------------------------------------------
+    grp_phys_f = grp_phys.at[g].add(-1)
     return st.replace(
         state=state_a.at[victim].set(FREE),
         group_of=group_of.at[victim].set(-1),
@@ -507,12 +695,115 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
         valid=valid.at[victim].set(False),
         stamp=stamp.at[victim].set(clock),
         clock=clock + 1,
-        grp_phys=grp_phys.at[g].add(-1),
+        grp_phys=grp_phys_f,
+        grp_surplus=surplus_of(st.grp_active, grp_phys_f, st.grp_alloc),
+        free_blocks=st.free_blocks - n_claimed + 1,
         active_blk=active_blk,
         page_map=page_map,
         grp_size=grp_size,
         n_mig=st.n_mig + jnp.sum(ok),
         n_dropped=st.n_dropped + jnp.sum(is_live & jnp.logical_not(ok)),
+        n_erase=st.n_erase + 1,
+    )
+
+
+def _gc_drain_bulk_static(ctx: SimContext, st: SimState, victim, g):
+    """Single-target specialization of :func:`_gc_drain_bulk` for
+    static-detector contexts (``ctx.can_demote=False``).
+
+    Every live page lands back in group g, so the per-target-group claim
+    machinery ([b,G] one-hots, free-rank assignment, [K]-wide seal/claim
+    masks) collapses to scalars: at most ONE fresh block is claimed (the
+    lowest-index FREE block — what the sequential pop hands out) and every
+    block-sized update is a masked single-index store. Elementwise-
+    identical to the general drain with constant targets, which the
+    bulk-vs-reference equivalence suite asserts for every static manager.
+    """
+    b = ctx.geom.pages_per_block
+    k = ctx.geom.n_blocks
+    lba_pages = st.page_map.shape[0]
+
+    lbas = st.slot_lba[victim]            # [B]; dead slots hold -1
+    is_live = st.valid[victim]            # [B]
+    lbas_c = jnp.maximum(lbas, 0)
+    n_live = jnp.sum(is_live)
+    live_i = is_live.astype(jnp.int32)
+    rank = jnp.cumsum(live_i) - live_i    # live-rank of each slot
+
+    ab = st.active_blk[g]
+    has_ab = ab >= 0
+    ab_c = jnp.maximum(ab, 0)
+    fill_ab = jnp.where(has_ab, st.fill[ab_c], b)
+    space = b - jnp.minimum(fill_ab, b)   # free slots in the active block
+    claim = n_live > space
+    seal = claim & has_ab
+
+    new_blk = jnp.argmax(st.state == FREE)  # lowest-index FREE block
+    claim_ok = claim & (st.free_blocks >= 1)
+    new_c = jnp.where(claim_ok, new_blk, 0)
+
+    # -- per-page destinations ---------------------------------------------
+    in_old = rank < space
+    dst_blk = jnp.where(in_old, ab_c, new_c)
+    dst_slot = jnp.where(in_old, fill_ab + rank, rank - space)
+    ok = is_live & (in_old | claim_ok)
+    db = jnp.where(ok, dst_blk, k)        # masked rows land nowhere
+    n_old = jnp.minimum(n_live, space)
+    n_new = jnp.where(claim_ok, n_live - n_old, 0)
+    n_ok = n_old + n_new
+
+    # -- seal / claim bookkeeping (all scalar-index stores) -----------------
+    state_a = st.state.at[ab_c].set(
+        jnp.where(seal, CLOSED, st.state[ab_c])
+    )
+    state_a = state_a.at[new_c].set(
+        jnp.where(claim_ok, OPEN, state_a[new_c])
+    )
+    group_of = st.group_of.at[new_c].set(
+        jnp.where(claim_ok, g, st.group_of[new_c])
+    )
+    stamp = st.stamp.at[new_c].set(
+        jnp.where(claim_ok, st.clock, st.stamp[new_c])
+    )
+    clock = st.clock + jnp.where(claim_ok, 1, 0)
+    fill_a = st.fill.at[ab_c].add(jnp.where(has_ab, n_old, 0))
+    fill_a = fill_a.at[new_c].set(
+        jnp.where(claim_ok, n_new, fill_a[new_c])
+    )
+    live_a = st.live.at[ab_c].add(jnp.where(has_ab, n_old, 0))
+    live_a = live_a.at[new_c].add(jnp.where(claim_ok, n_new, 0))
+    active_blk = st.active_blk.at[g].set(jnp.where(claim_ok, new_blk, ab))
+
+    # -- land the pages -----------------------------------------------------
+    idx = jnp.arange(b, dtype=jnp.int32)
+    slot_lba, valid = compact_slots(
+        st.slot_lba, st.valid,
+        jnp.where(ok, victim, -1), idx, db, dst_slot,
+    )
+    page_map = st.page_map.at[jnp.where(is_live, lbas_c, lba_pages)].set(
+        jnp.where(ok, dst_blk * b + dst_slot, -1), mode="drop"
+    )  # dead slots land out of bounds → untouched
+
+    # -- erase the victim ---------------------------------------------------
+    # +1 physical block if one was claimed, -1 for the erased victim
+    grp_phys = st.grp_phys.at[g].add(jnp.where(claim_ok, 0, -1))
+    return st.replace(
+        state=state_a.at[victim].set(FREE),
+        group_of=group_of.at[victim].set(-1),
+        fill=fill_a.at[victim].set(0),
+        live=live_a.at[victim].set(0),
+        slot_lba=slot_lba.at[victim].set(-1),
+        valid=valid.at[victim].set(False),
+        stamp=stamp.at[victim].set(clock),
+        clock=clock + 1,
+        grp_phys=grp_phys,
+        grp_surplus=surplus_of(st.grp_active, grp_phys, st.grp_alloc),
+        free_blocks=st.free_blocks - jnp.where(claim_ok, 1, 0) + 1,
+        active_blk=active_blk,
+        page_map=page_map,
+        grp_size=st.grp_size.at[g].add(n_ok - n_live),
+        n_mig=st.n_mig + n_ok,
+        n_dropped=st.n_dropped + (n_live - n_ok),
         n_erase=st.n_erase + 1,
     )
 
@@ -547,6 +838,7 @@ def _gc_drain_reference(ctx: SimContext, st: SimState, victim, g, demote_fn):
 
     st = jax.lax.fori_loop(0, b, body, st)
     # erase
+    grp_phys = st.grp_phys.at[g].add(-1)
     return st.replace(
         state=st.state.at[victim].set(FREE),
         group_of=st.group_of.at[victim].set(-1),
@@ -556,25 +848,37 @@ def _gc_drain_reference(ctx: SimContext, st: SimState, victim, g, demote_fn):
         valid=st.valid.at[victim].set(False),
         stamp=st.stamp.at[victim].set(st.clock),
         clock=st.clock + 1,
-        grp_phys=st.grp_phys.at[g].add(-1),
+        grp_phys=grp_phys,
+        grp_surplus=surplus_of(st.grp_active, grp_phys, st.grp_alloc),
+        free_blocks=st.free_blocks + 1,
         n_erase=st.n_erase + 1,
     )
 
 
-def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_lru):
+def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_lru,
+            enabled=True):
     """GC one victim in group g; migrate live pages via the bulk drain.
 
     rate_fn(st, lba) -> the page's true update rate (oracle detector input);
     must be a pure function of drain-invariant data (it is: oracle arrays
     are indexed by lba/phase only). The §5.6 demotion rule itself is
     derived from ``policy`` — see _gc_drain_bulk / _target_group_gc.
+
+    enabled: the caller's firing predicate, folded into the ONE dieted
+    drain cond here instead of a second full-state cond at the call site
+    (victim selection is a pair of [K] reductions, cheap to run masked).
     """
     assert ctx.gc_impl in ("bulk", "reference"), ctx.gc_impl
     victim, ok = _select_victim(ctx, st, g, gc_lru)
     # migrations may need one fresh block beyond the active's free slots:
     # never start a GC with an empty pool (callers keep it ≥ 2).
-    ok = ok & (jnp.sum(st.state == FREE) >= 1)
-    if ctx.gc_impl == "bulk":
+    ok = ok & (st.free_blocks >= 1) & enabled
+    if ctx.gc_impl == "bulk" and not ctx.can_demote:
+        # static detector: every page lands back in g — the scalar-claim
+        # specialization (no [b,G]/[K]-wide claim machinery per step)
+        def drain(s):
+            return _gc_drain_bulk_static(ctx, s, victim, g)
+    elif ctx.gc_impl == "bulk":
         def drain(s):
             return _gc_drain_bulk(ctx, s, victim, g, policy, rate_fn)
     else:
@@ -584,7 +888,7 @@ def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_lru):
         def drain(s):
             return _gc_drain_reference(ctx, s, victim, g, demote_fn)
 
-    return jax.lax.cond(ok, drain, lambda s: s, st)
+    return _cond_fields(ok, drain, st, _GC_FIELDS)
 
 
 # ---------------------------------------------------------------------------
@@ -612,12 +916,17 @@ def _recompute_alloc(ctx: SimContext, st: SimState, policy):
         - s.sum()
     )
 
-    op_closed = allocate_closed_form(
-        s, p, op_total,
-        cold_rule=True,
-        cold_hit_rate_frac=mcfg.cold_hit_rate_frac,
-        cold_op_frac=mcfg.cold_op_frac,
-    )
+    if ctx.use_closed_alloc:
+        op_closed = allocate_closed_form(
+            s, p, op_total,
+            cold_rule=True,
+            cold_hit_rate_frac=mcfg.cold_hit_rate_frac,
+            cold_op_frac=mcfg.cold_op_frac,
+        )
+    else:
+        # no drive in this context reads the closed form (is_closed is
+        # identically False): skip its 80-iteration eq.-3 bisection
+        op_closed = jnp.zeros_like(s)
     op_size = allocate_by_size(s, op_total)
     op_freq = allocate_by_frequency(p, op_total)
     is_closed = (policy["alloc_mode"] == ALLOC_CLOSED) | use_assumed
@@ -625,7 +934,10 @@ def _recompute_alloc(ctx: SimContext, st: SimState, policy):
     op = jnp.where(is_closed, op_closed, jnp.where(is_freq, op_freq, op_size))
     alloc_blocks = jnp.ceil((s + op) / b).astype(jnp.int32)
     alloc_blocks = jnp.where(active, jnp.maximum(alloc_blocks, 1), 0)
-    return st.replace(grp_alloc=alloc_blocks)
+    return st.replace(
+        grp_alloc=alloc_blocks,
+        grp_surplus=surplus_of(active, st.grp_phys, alloc_blocks),
+    )
 
 
 def _interval_update(ctx: SimContext, st: SimState, policy):
@@ -638,7 +950,8 @@ def _interval_update(ctx: SimContext, st: SimState, policy):
         interval=st.interval + 1,
         cooldown=jnp.maximum(st.cooldown - 1, 0),
     )
-    st = _maybe_create_or_merge(ctx, st, policy)
+    if ctx.use_dynamic:  # §5.2 create/merge: two argsorts per interval
+        st = _maybe_create_or_merge(ctx, st, policy)
     st = _recompute_alloc(ctx, st, policy)
     return st
 
@@ -674,17 +987,24 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
 
     def do_create(st):
         slot = jnp.argmin(st.grp_active)  # first inactive slot
+        grp_active = st.grp_active.at[slot].set(True)
+        grp_phys = st.grp_phys.at[slot].set(0)
         return st.replace(
-            grp_active=st.grp_active.at[slot].set(True),
+            grp_active=grp_active,
             # seed stats: half the hottest group's measured frequency
             grp_p=st.grp_p.at[slot].set(st.grp_p[hottest] * 0.5),
             grp_size=st.grp_size.at[slot].set(0),
-            grp_phys=st.grp_phys.at[slot].set(0),
+            grp_phys=grp_phys,
+            grp_surplus=surplus_of(grp_active, grp_phys, st.grp_alloc),
             grp_created=st.grp_created.at[slot].set(st.interval),
             cooldown=jnp.asarray(mcfg.w_intervals, jnp.int32),
         )
 
-    st = jax.lax.cond(create, do_create, lambda s: s, st)
+    st = _cond_fields(
+        create, do_create, st,
+        ("grp_active", "grp_p", "grp_size", "grp_phys", "grp_surplus",
+         "grp_created", "cooldown"),
+    )
 
     # merge: coldest adjacent pair that converged, or an undersized group
     hr = _hit_rates(st)
@@ -719,16 +1039,24 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
         for key in ("grp_size", "grp_phys", "grp_p", "grp_writes"):
             arr = getattr(st, key)
             merged[key] = arr.at[g_to].add(arr[g_from]).at[g_from].set(0)
+        grp_active = st.grp_active.at[g_from].set(False)
         return st.replace(
             group_of=group_of,
             state=state_a,
             active_blk=st.active_blk.at[g_from].set(-1),
-            grp_active=st.grp_active.at[g_from].set(False),
+            grp_active=grp_active,
+            grp_surplus=surplus_of(
+                grp_active, merged["grp_phys"], st.grp_alloc
+            ),
             cooldown=jnp.asarray(mcfg.w_intervals, jnp.int32),
             **merged,
         )
 
-    return jax.lax.cond(do_merge, merge, lambda s: s, st)
+    return _cond_fields(
+        do_merge, merge, st,
+        ("group_of", "state", "active_blk", "grp_active", "grp_surplus",
+         "cooldown", "grp_size", "grp_phys", "grp_p", "grp_writes"),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -736,7 +1064,13 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
 # ---------------------------------------------------------------------------
 
 def _sgv_neighbors(st: SimState):
-    """hotter_of[g], colder_of[g] by current hit-rate order."""
+    """hotter_of[g], colder_of[g] by current hit-rate order (argsort form).
+
+    Kept as the semantic oracle for the reduction-based
+    :func:`_neighbor_hotter` / :func:`_neighbor_colder` the hot paths use
+    (tests/test_write_engine.py cross-checks them on random stats) — an
+    XLA:CPU argsort hauled through every vmapped write step is measurable.
+    """
     hr = _hit_rates(st)
     g_max = hr.shape[0]
     # rank[g] = position in descending order
@@ -752,58 +1086,99 @@ def _sgv_neighbors(st: SimState):
     return neighbor
 
 
+def _neighbor_hotter(hr, active, g):
+    """``order[clip(rank[g]-1, 0, n_active-1)]`` of the stable (-hr, idx)
+    sort, as two reductions: the adjacent hotter group is the candidate
+    (hotter than g, or same hr with lower index) with the LOWEST hit rate,
+    ties to the highest index; with no candidate g is already hottest and
+    stays put."""
+    g_max = hr.shape[0]
+    idx = jnp.arange(g_max, dtype=jnp.int32)
+    g = jnp.asarray(g, jnp.int32)
+    hr_g = hr[g]
+    cand = active & ((hr > hr_g) | ((hr == hr_g) & (idx < g)))
+    min_hr = jnp.min(jnp.where(cand, hr, jnp.inf))
+    nb = jnp.max(jnp.where(cand & (hr == min_hr), idx, -1))
+    return jnp.where(jnp.any(cand), nb, g).astype(jnp.int32)
+
+
+def _neighbor_colder(hr, active, g, *, g_known_active: bool = False):
+    """``order[clip(rank[g]+1, 0, n_active-1)]``: the candidate set is
+    every active group strictly after g in (-hr, index) lexicographic
+    order, and the neighbor is its (max hr, then min index) element. An
+    empty candidate set means an active g is already the coldest and stays
+    put; an inactive g (post-merge corner) falls to the coldest active —
+    exactly argsort's clip(rank+1, n_active-1).
+
+    g_known_active: trace-time promise that g is active (GC always drains
+    an active group), which drops the coldest-active fallback reductions —
+    this runs once per unrolled iteration of the drain's demotion scan.
+    """
+    g_max = hr.shape[0]
+    idx = jnp.arange(g_max, dtype=jnp.int32)
+    g = jnp.asarray(g, jnp.int32)
+    hr_g = hr[g]
+    cand = active & ((hr < hr_g) | ((hr == hr_g) & (idx > g)))
+    best_hr = jnp.max(jnp.where(cand, hr, -2.0))
+    nb = jnp.min(jnp.where(cand & (hr == best_hr), idx, g_max))
+    if g_known_active:
+        fallback = g
+    else:
+        cold_hr = jnp.min(jnp.where(active, hr, jnp.inf))
+        coldest = jnp.max(jnp.where(active & (hr == cold_hr), idx, -1))
+        fallback = jnp.where(active[g], g, coldest)
+    return jnp.where(jnp.any(cand), nb, fallback).astype(jnp.int32)
+
+
 def _target_group_app(ctx: SimContext, st: SimState, lba, cur_g, policy, rate_fn):
-    """Target group for an application update of `lba` living in cur_g."""
+    """Target group for an application update of `lba` living in cur_g.
+
+    The detector is dispatched at TRACE time from ``ctx.mcfg.td_mode``:
+    every compiled step (one drive under jit, or one structure-homogeneous
+    fleet sub-batch under vmap — see fleet._part_key) has exactly one
+    detector, so the former per-step ``lax.switch`` over all branches —
+    which under vmap selected the full [G, bits] bloom triple three ways
+    every write — is structurally a single branch.
+    """
     cur_g = jnp.asarray(cur_g, jnp.int32)
-
-    def static_br(st):
+    td = ctx.mcfg.td_mode
+    if td == "static" or not ctx.can_demote:
+        # pages never change temperature: no detector machinery at all
         return st, cur_g
-
-    def fdp_br(st):
+    if td == "fdp":
         # fixed assumed per-page rate bands: promote if ≥2× the group's
         # assumed rate (paper §5/§6: FDP's fixed-order assumption)
-        neighbor = _sgv_neighbors(st)
         r = rate_fn(st, lba)
         promote = r > 2.0 * policy["fdp_rate"][cur_g]
-        g = jnp.where(promote, neighbor(cur_g, -1), cur_g)
-        return st, g.astype(jnp.int32)
-
-    def bloom_br(st):
-        # bloom (§5.6): in both filters → promote
-        st, in_both = _bloom_update(ctx, st, lba, cur_g)
-        g = jnp.where(in_both, _sgv_neighbors(st)(cur_g, -1), cur_g)
-        return st, g.astype(jnp.int32)
-
-    branches = [static_br, fdp_br]
-    if ctx.use_bloom:
-        branches.append(bloom_br)
-    return jax.lax.switch(policy["td_mode"], branches, st)
+        nb = _neighbor_hotter(_hit_rates(st), st.grp_active, cur_g)
+        return st, jnp.where(promote, nb, cur_g).astype(jnp.int32)
+    assert td == "bloom", td
+    # bloom (§5.6): in both filters → promote
+    st, in_both = _bloom_update(ctx, st, lba, cur_g)
+    nb = _neighbor_hotter(_hit_rates(st), st.grp_active, cur_g)
+    return st, jnp.where(in_both, nb, cur_g).astype(jnp.int32)
 
 
 def _target_group_gc(ctx: SimContext, st: SimState, lba, cur_g, policy, rate_fn):
+    """Per-page GC demotion target (the reference drain's demote_fn);
+    trace-time detector dispatch, like :func:`_target_group_app`."""
     cur_g = jnp.asarray(cur_g, jnp.int32)
-
-    def static_br(st):
+    td = ctx.mcfg.td_mode
+    if td == "static" or not ctx.can_demote:
         return cur_g
-
-    def fdp_br(st):
-        neighbor = _sgv_neighbors(st)
+    if td == "fdp":
         r = rate_fn(st, lba)
         demote = r < 0.5 * policy["fdp_rate"][cur_g]
-        return jnp.where(demote, neighbor(cur_g, +1), cur_g).astype(jnp.int32)
-
-    def bloom_br(st):
-        # bloom: in neither filter during a migration → demote
-        neighbor = _sgv_neighbors(st)
-        in_active = _bloom_query(ctx, st.bloom_active, lba, cur_g)
-        in_passive = _bloom_query(ctx, st.bloom_passive, lba, cur_g)
-        g = jnp.where(~in_active & ~in_passive, neighbor(cur_g, +1), cur_g)
-        return g.astype(jnp.int32)
-
-    branches = [static_br, fdp_br]
-    if ctx.use_bloom:
-        branches.append(bloom_br)
-    return jax.lax.switch(policy["td_mode"], branches, st)
+        nb = _neighbor_colder(_hit_rates(st), st.grp_active, cur_g)
+        return jnp.where(demote, nb, cur_g).astype(jnp.int32)
+    assert td == "bloom", td
+    # bloom: in neither filter during a migration → demote
+    in_active = _bloom_query(ctx, st.bloom_active, lba, cur_g)
+    in_passive = _bloom_query(ctx, st.bloom_passive, lba, cur_g)
+    nb = _neighbor_colder(_hit_rates(st), st.grp_active, cur_g)
+    return jnp.where(
+        ~in_active & ~in_passive, nb, cur_g
+    ).astype(jnp.int32)
 
 
 # -- bloom filter pair (per group) ------------------------------------------
@@ -829,7 +1204,9 @@ def _bloom_update(ctx: SimContext, st: SimState, lba, g):
     in_passive = st.bloom_passive[g, h1] & st.bloom_passive[g, h2]
     bloom_active = st.bloom_active.at[g, h1].set(True).at[g, h2].set(True)
     bloom_writes = st.bloom_writes.at[g].add(1)
-    rotate = bloom_writes[g] >= jnp.maximum(st.grp_size[g], 64)
+    rotate = bloom_writes[g] >= jnp.maximum(
+        st.grp_size[g], ctx.mcfg.bloom_rotate_min_writes
+    )
     # row-masked rotation (no lax.cond: under vmap a cond would select over
     # the full [G, bits] filter pair every step; this touches one row)
     row_active = bloom_active[g]
@@ -851,6 +1228,81 @@ def _bloom_update(ctx: SimContext, st: SimState, lba, g):
 # the step + runner
 # ---------------------------------------------------------------------------
 
+def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
+    """GC → emergency valve → write → movement ops → §5.1 interval update.
+
+    The seed step order downstream of invalidate + target selection. Runs
+    on every write of the reference engine (``ctx.fast_path=False``) and as
+    the heavy branch of the split engine. All pool/budget predicates are
+    O(1) reads of the carried ``free_blocks``/``grp_surplus`` accounting.
+    """
+    geom, mcfg = ctx.geom, ctx.mcfg
+    b = geom.pages_per_block
+
+    # GC when the group needs a new block it is not entitled to, or the
+    # pool is at reserve.
+    blk = st.active_blk[g]
+    needs_block = jnp.where(
+        blk >= 0, st.fill[jnp.maximum(blk, 0)] >= b, True
+    )
+    over_budget = st.grp_phys[g] >= st.grp_alloc[g]
+    low_pool = st.free_blocks <= mcfg.gc_reserve_blocks
+    do_gc = needs_block & (over_budget | low_pool)
+    st = _gc_one(ctx, st, g, policy, lookup, policy["gc_lru"], enabled=do_gc)
+
+    # emergency valve: if the pool is (nearly) empty, greedily reclaim
+    # from the fullest group until headroom returns (bounded loop; only
+    # fires when a policy briefly overdraws its budget). The carry is the
+    # GC-mutable field subset, not the whole state.
+    def needs_air(s, tries):
+        return (s.free_blocks < 2) & (tries < mcfg.valve_max_tries)
+
+    def reclaim(s, tries):
+        # global greedy: the best victim anywhere (its group pays)
+        closed = s.state == CLOSED
+        score = jnp.where(closed, s.live, INT_MAX)
+        victim = jnp.argmin(score)
+        g_v = jnp.maximum(s.group_of[victim], 0)
+        return (
+            _gc_one(ctx, s, g_v, policy, lookup, jnp.asarray(False)),
+            tries + 1,
+        )
+
+    st, _ = _while_fields(needs_air, reclaim, st, 0, _GC_FIELDS)
+
+    st = _write_page(ctx, st, lba, g, is_migration=False)
+    st = st.replace(
+        n_app=st.n_app + 1,
+        grp_writes=st.grp_writes.at[g].add(1),
+    )
+
+    # movement operations (§5.3): one compaction GC per step on the most
+    # surplus group, donating the redeemed block to the pool. Structurally
+    # absent when the context rules movement out (ctx.use_movement=False).
+    if ctx.use_movement:
+        g_s = jnp.argmax(st.grp_surplus)
+        pool_ok = st.free_blocks >= 2  # migration headroom
+        st = _gc_one(
+            ctx, st, g_s, policy, lookup, policy["gc_lru"],
+            enabled=policy["movement_ops"] & (st.grp_surplus[g_s] >= 1)
+            & pool_ok,
+        )
+
+    # interval completion (§5.1); t+1 == n_app after this write, so the
+    # predicate is exactly (n_app % h == 0). With a fleet-shared h it is
+    # a SCALAR shared by every vmapped drive; per-drive interval sweeps
+    # (ctx.per_drive_interval) read the traced policy["h"] instead.
+    h = policy["h"] if ctx.per_drive_interval else ctx.h
+    is_interval = ((t + 1) % h) == 0
+    st = _cond_fields(
+        is_interval,
+        lambda s: _interval_update(ctx, s, policy),
+        st,
+        _INTERVAL_FIELDS,
+    )
+    return st
+
+
 def make_step(ctx: SimContext, policy, rate_fn):
     """Build the per-write scan step.
 
@@ -862,11 +1314,21 @@ def make_step(ctx: SimContext, policy, rate_fn):
     stays a scalar under vmap whenever every drive shares h
     (ctx.per_drive_interval=False) — the expensive §5.1 bookkeeping then
     lowers to a real branch taken every h steps, not a per-step select.
+
+    With ``ctx.fast_path=True`` (default) the step is split: a write whose
+    target group has an open active block with room, with the pool above
+    reserve, no redeemable movement surplus anywhere, and no interval
+    boundary, takes the LEAN branch — invalidate counters, pick the group,
+    and one fused append (``kernels/write_path``). Everything else
+    (:func:`_step_tail`) runs only when one of those O(1) scalar predicates
+    trips. The predicates are exact, not conservative: a fast write is
+    bit-identical to what the heavy path would have produced, which
+    tests/test_write_engine.py asserts against ``fast_path=False``.
     """
     geom, mcfg = ctx.geom, ctx.mcfg
     b = geom.pages_per_block
 
-    def step(st, xs):
+    def reference_step(st, xs):
         lba, t = xs
 
         def lookup(s, l):
@@ -875,80 +1337,108 @@ def make_step(ctx: SimContext, policy, rate_fn):
         st, old_g = _invalidate(ctx, st, lba)
         st, g = _target_group_app(ctx, st, lba, old_g, policy, lookup)
         g = jnp.where(st.grp_active[g], g, old_g)
-
-        # GC when the group needs a new block it is not entitled to, or the
-        # pool is at reserve.
-        blk = st.active_blk[g]
-        needs_block = jnp.where(
-            blk >= 0, st.fill[jnp.maximum(blk, 0)] >= b, True
-        )
-        free_blocks = jnp.sum(st.state == FREE)
-        over_budget = st.grp_phys[g] >= st.grp_alloc[g]
-        low_pool = free_blocks <= mcfg.gc_reserve_blocks
-        do_gc = needs_block & (over_budget | low_pool)
-        st = jax.lax.cond(
-            do_gc,
-            lambda s: _gc_one(ctx, s, g, policy, lookup, policy["gc_lru"]),
-            lambda s: s,
-            st,
-        )
-
-        # emergency valve: if the pool is (nearly) empty, greedily reclaim
-        # from the fullest group until headroom returns (bounded loop; only
-        # fires when a policy briefly overdraws its budget).
-        def needs_air(carry):
-            s, tries = carry
-            return (jnp.sum(s.state == FREE) < 2) & (tries < 4)
-
-        def reclaim(carry):
-            s, tries = carry
-            # global greedy: the best victim anywhere (its group pays)
-            closed = s.state == CLOSED
-            score = jnp.where(closed, s.live, INT_MAX)
-            victim = jnp.argmin(score)
-            g_v = jnp.maximum(s.group_of[victim], 0)
-            return (
-                _gc_one(ctx, s, g_v, policy, lookup, jnp.asarray(False)),
-                tries + 1,
-            )
-
-        st, _ = jax.lax.while_loop(needs_air, reclaim, (st, 0))
-
-        st = _write_page(ctx, st, lba, g, is_migration=False)
-        st = st.replace(
-            n_app=st.n_app + 1,
-            grp_writes=st.grp_writes.at[g].add(1),
-        )
-
-        # movement operations (§5.3): one compaction GC per step on the most
-        # surplus group, donating the redeemed block to the pool.
-        surplus = jnp.where(
-            st.grp_active, st.grp_phys - st.grp_alloc, -INT_MAX
-        )
-        g_s = jnp.argmax(surplus)
-        pool_ok = jnp.sum(st.state == FREE) >= 2  # migration headroom
-        st = jax.lax.cond(
-            policy["movement_ops"] & (surplus[g_s] >= 1) & pool_ok,
-            lambda s: _gc_one(ctx, s, g_s, policy, lookup, policy["gc_lru"]),
-            lambda s: s,
-            st,
-        )
-
-        # interval completion (§5.1); t+1 == n_app after this write, so the
-        # predicate is exactly (n_app % h == 0). With a fleet-shared h it is
-        # a SCALAR shared by every vmapped drive; per-drive interval sweeps
-        # (ctx.per_drive_interval) read the traced policy["h"] instead.
-        h = policy["h"] if ctx.per_drive_interval else ctx.h
-        is_interval = ((t + 1) % h) == 0
-        st = jax.lax.cond(
-            is_interval,
-            lambda s: _interval_update(ctx, s, policy),
-            lambda s: s,
-            st,
-        )
+        st = _step_tail(ctx, st, lba, t, g, policy, lookup)
         return st, (st.n_app, st.n_mig)
 
-    return step
+    def split_step(st, xs):
+        lba, t = xs
+
+        def lookup(s, l):
+            return rate_fn(s, l, t)
+
+        st, old_g, old_pm = _invalidate_counts(ctx, st, lba)
+        st, g = _target_group_app(ctx, st, lba, old_g, policy, lookup)
+        g = jnp.where(st.grp_active[g], g, old_g)
+
+        # O(1) heavy-path predicates. Exactness argument per term:
+        #  * room in the active block → _step_tail's do_gc and the
+        #    _write_page alloc are both predicated on the block being full
+        #    (low_pool alone never GCs without needs_block);
+        #  * free_blocks ≥ 2 → the emergency valve cannot fire, and the
+        #    fast write claims no block so the pool is untouched;
+        #  * movement: a fast write changes no grp_phys/grp_alloc, so the
+        #    post-write surplus the tail would read equals the carried
+        #    pre-write surplus — if its max is < 1, movement cannot fire;
+        #  * the interval predicate is the tail's own.
+        blk = st.active_blk[g]
+        blk_c = jnp.maximum(blk, 0)
+        has_room = (blk >= 0) & (st.fill[blk_c] < b)
+        valve_may = st.free_blocks < 2
+        if ctx.use_movement:
+            movement_may = policy["movement_ops"] & (
+                jnp.max(st.grp_surplus) >= 1
+            )
+        else:
+            movement_may = False
+        h = policy["h"] if ctx.per_drive_interval else ctx.h
+        is_interval = ((t + 1) % h) == 0
+        heavy = (~has_room) | valve_may | movement_may | is_interval
+
+        def heavy_path(st):
+            st = _clear_valid(ctx, st, old_pm)
+            return _step_tail(ctx, st, lba, t, g, policy, lookup)
+
+        def fast_path(st):
+            slot = st.fill[blk_c]
+            page_map, slot_lba, valid = apply_write(
+                st.page_map, st.slot_lba, st.valid, lba, old_pm, blk_c, slot
+            )
+            return st.replace(
+                page_map=page_map,
+                slot_lba=slot_lba,
+                valid=valid,
+                fill=st.fill.at[blk_c].add(1),
+                live=st.live.at[blk_c].add(1),
+                grp_size=st.grp_size.at[g].add(1),
+                n_app=st.n_app + 1,
+                grp_writes=st.grp_writes.at[g].add(1),
+            )
+
+        out = jax.lax.cond(
+            heavy,
+            lambda s: _fields_of(heavy_path(s), _STEP_FIELDS),
+            lambda s: _fields_of(fast_path(s), _STEP_FIELDS),
+            st,
+        )
+        st = st.replace(**dict(zip(_STEP_FIELDS, out)))
+        return st, (st.n_app, st.n_mig)
+
+    return split_step if ctx.fast_path else reference_step
+
+
+def scan_writes(ctx: SimContext, step, st: SimState, lbas, ts):
+    """Scan ``step`` over a write segment, honoring the chunking knobs.
+
+    ``ctx.trace_every == 1``: one scan over T steps, dense cumulative
+    (n_app, n_mig) trace [T]. ``trace_every = E > 1``: the writes are
+    regrouped [T//E, E] (E must divide T) and the counters are emitted once
+    per chunk — element j equals the dense trace at step (j+1)·E - 1. The
+    inner chunk emits nothing, so XLA sees E fused write-steps between
+    trace stores. Chunking preserves write-order semantics trivially: the
+    same step function is folded over the same (lba, t) sequence, only the
+    loop nest and the trace sampling change. ``ctx.unroll`` unrolls the
+    (inner) scan body to amortize XLA:CPU per-iteration overhead.
+    """
+    t_total = int(lbas.shape[0])
+    e = ctx.trace_every
+    if e <= 1:
+        return jax.lax.scan(
+            step, st, (lbas, ts), unroll=min(ctx.unroll, max(t_total, 1))
+        )
+    assert t_total % e == 0, (
+        f"trace_every={e} must divide the segment length {t_total}"
+    )
+
+    def inner(s, xs):
+        s, _ = step(s, xs)
+        return s, None
+
+    def chunk(s, xs):
+        s, _ = jax.lax.scan(inner, s, xs, unroll=min(ctx.unroll, e))
+        return s, (s.n_app, s.n_mig)
+
+    xs = (lbas.reshape(t_total // e, e), ts.reshape(t_total // e, e))
+    return jax.lax.scan(chunk, st, xs)
 
 
 @functools.partial(jax.jit, static_argnames=("ctx",))
@@ -958,7 +1448,7 @@ def _run_jit(ctx: SimContext, st: SimState, lbas, page_rate, policy):
 
     step = make_step(ctx, policy, rate_fn)
     ts = st.n_app + jnp.arange(lbas.shape[0], dtype=jnp.int32)
-    return jax.lax.scan(step, st, (lbas, ts))
+    return scan_writes(ctx, step, st, lbas, ts)
 
 
 def run(ctx: SimContext, st: SimState, lbas, *, page_rate=None, assumed_p=None,
@@ -967,8 +1457,9 @@ def run(ctx: SimContext, st: SimState, lbas, *, page_rate=None, assumed_p=None,
 
     lbas: int32 [T]; page_rate: float32 [LBA] true per-page update rates
     (oracle detector modes). Returns (final_state, trace dict of CUMULATIVE
-    counters [T]) — segment the workload (e.g. at a frequency swap) by
-    calling run() repeatedly with updated oracle arrays.
+    counters — [T] dense, or [T // ctx.trace_every] sampled at every
+    trace_every-th write) — segment the workload (e.g. at a frequency
+    swap) by calling run() repeatedly with updated oracle arrays.
     """
     lbas = jnp.asarray(lbas, jnp.int32)
     if page_rate is None:

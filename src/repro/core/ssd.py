@@ -25,6 +25,20 @@ import jax
 import jax.numpy as jnp
 
 FREE, OPEN, CLOSED = 0, 1, 2
+INT32_MAX = 2**31 - 1
+
+
+def surplus_of(grp_active, grp_phys, grp_alloc):
+    """Masked per-group block surplus (the carried ``SimState.grp_surplus``).
+
+    Inactive groups sit at -INT32_MAX so the movement-op argmax never picks
+    them. Recomputed (an O(G) elementwise op) at every site that touches
+    ``grp_phys``/``grp_alloc``/``grp_active`` rather than patched per index —
+    G is tiny and one formula can't drift from the invariant.
+    """
+    return jnp.where(
+        grp_active, grp_phys - grp_alloc, -INT32_MAX
+    ).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +94,12 @@ class ManagerConfig:
     cold_op_frac: float = 0.05
     gc_reserve_blocks: int = 2
     bloom_bits_per_page: int = 4
+    # emergency-valve bound: max global greedy reclaims per write when the
+    # pool is (nearly) empty (simulator.make_step's while_loop)
+    valve_max_tries: int = 4
+    # §5.6 bloom rotation floor: a group's filter pair rotates every
+    # max(grp_size, this) writes, so tiny/fresh groups don't thrash
+    bloom_rotate_min_writes: int = 64
 
 
 def bloom_bits(geom: Geometry, mcfg: ManagerConfig) -> int:
@@ -96,7 +116,9 @@ _SIM_STATE_FIELDS = (
     "slot_lba", "valid", "live", "fill", "stamp", "state", "group_of",
     # per-group
     "active_blk", "grp_size", "grp_phys", "grp_p", "grp_writes",
-    "grp_alloc", "grp_active", "grp_created",
+    "grp_alloc", "grp_active", "grp_created", "grp_surplus",
+    # O(1) accounting (incrementally maintained; see check_invariants)
+    "free_blocks",
     # detector (bloom filter pair)
     "bloom_active", "bloom_passive", "bloom_writes",
     # counters
@@ -136,6 +158,15 @@ class SimState:
     grp_alloc: jax.Array    # [G] int32 block budget (§5.5)
     grp_active: jax.Array   # [G] bool
     grp_created: jax.Array  # [G] int32 creation interval
+    # carried block-surplus per group: grp_phys - grp_alloc where active,
+    # -INT_MAX elsewhere — the movement-op argmax reads this directly
+    grp_surplus: jax.Array  # [G] int32
+    # incrementally-maintained pool size: == (state == FREE).sum() always.
+    # Every per-write predicate (GC low-pool, emergency valve, movement-op
+    # headroom) is an O(1) read of this scalar; the only surviving full
+    # reductions over block state are per-GC (victim search) or diagnostic
+    # (check_invariants).
+    free_blocks: jax.Array  # [] int32
     bloom_active: jax.Array   # [G, bits] bool (§5.6); [G, 1] when unused
     bloom_passive: jax.Array  # [G, bits] bool
     bloom_writes: jax.Array   # [G] int32
@@ -159,6 +190,67 @@ class SimState:
 
     def items(self):
         return ((k, getattr(self, k)) for k in _SIM_STATE_FIELDS)
+
+    # -- diagnostics --------------------------------------------------------
+    def check_invariants(self) -> dict:
+        """Full-reduction cross-checks of the O(1)/O(G) carried accounting.
+
+        Returns a dict of named boolean jnp scalars (jit/vmap-friendly);
+        :func:`assert_invariants` is the host-side raising wrapper. This is
+        the ONLY place outside victim selection that still reduces over the
+        whole block array — by design: the write path reads the carried
+        scalars, and this checker proves they never drift.
+        """
+        k, b = self.slot_lba.shape
+        arange_g = jnp.arange(self.grp_active.shape[0])
+        # per-group physical block counts from scratch
+        owned = self.group_of[None, :] == arange_g[:, None]  # [G, K]
+        phys = jnp.sum(owned & (self.state[None, :] != FREE), axis=1)
+        # packed-map injectivity: every mapped lba names a distinct, valid
+        # slot whose slot_lba points back at it
+        pm = self.page_map
+        mapped = pm >= 0
+        pm_c = jnp.where(mapped, pm, k * b)
+        hits = jnp.zeros(k * b + 1, jnp.int32).at[pm_c].add(1)
+        back = jnp.where(
+            mapped,
+            self.slot_lba.reshape(-1)[jnp.minimum(pm_c, k * b - 1)]
+            == jnp.arange(pm.shape[0]),
+            True,
+        )
+        slot_valid = jnp.where(
+            mapped,
+            self.valid.reshape(-1)[jnp.minimum(pm_c, k * b - 1)],
+            True,
+        )
+        return {
+            "free_blocks": self.free_blocks == jnp.sum(self.state == FREE),
+            "grp_phys": jnp.all(phys == self.grp_phys),
+            "grp_surplus": jnp.all(
+                self.grp_surplus
+                == surplus_of(self.grp_active, self.grp_phys, self.grp_alloc)
+            ),
+            "grp_size": jnp.all(
+                jnp.sum(
+                    owned * self.live[None, :], axis=1
+                ) == self.grp_size
+            ),
+            "page_map_injective": jnp.all(hits[: k * b] <= 1),
+            "page_map_valid": jnp.all(slot_valid),
+            "page_map_backptr": jnp.all(back),
+            "live_counts": jnp.all(
+                jnp.sum(self.valid, axis=1) == self.live
+            ),
+            "fill_bounds": jnp.all(
+                (self.fill >= self.live) & (self.fill <= b)
+            ),
+        }
+
+
+def assert_invariants(st: SimState, label: str = "") -> None:
+    """Host-side :meth:`SimState.check_invariants` with named failures."""
+    failed = [k for k, ok in st.check_invariants().items() if not bool(ok)]
+    assert not failed, f"invariants violated{f' ({label})' if label else ''}: {failed}"
 
 
 def init_state(
@@ -244,6 +336,12 @@ def init_state(
         grp_alloc=jnp.asarray(np.maximum(grp_phys, 1)),
         grp_active=jnp.asarray(grp_active),
         grp_created=jnp.zeros(g_max, jnp.int32),
+        grp_surplus=jnp.asarray(
+            np.where(
+                grp_active, grp_phys - np.maximum(grp_phys, 1), -INT32_MAX
+            ).astype(np.int32)
+        ),
+        free_blocks=jnp.asarray(int((state_arr == FREE).sum()), jnp.int32),
         # (G, 1) placeholder when the context excludes the bloom branch
         # (SimContext.use_bloom=False)
         bloom_active=jnp.zeros(

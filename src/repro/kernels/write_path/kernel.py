@@ -1,0 +1,82 @@
+"""The fused fast-path write as a Pallas TPU kernel.
+
+The simulator's steady-state write (invalidate the page's old slot, append
+it to the target group's open block, repoint the packed map) is three
+single-element updates on three pools. Issued as separate XLA ops they are
+three kernel launches a step; the Pallas form makes the update list a
+scalar-prefetch operand — one [4] int32 row ``(lba, old_pm, new_pm, ok)``
+— and lands all three pools in one kernel with the pools aliased in place,
+mirroring ``kernels/gc_compact``.
+
+The pools arrive FLATTENED ([LBA] and [K·B]) and reshaped to (N, 1) tiles
+so the single-element stores are plain 2-D dynamic slices. ``ok`` masks the
+whole op (a disabled call must leave every pool untouched) and
+``old_pm < 0`` masks just the invalidate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_write_kernel(ops_ref, pm_ref, lba_ref, val_ref,
+                        pm_out, lba_out, val_out):
+    lba = ops_ref[0, 0]
+    old = ops_ref[0, 1]
+    new = ops_ref[0, 2]
+    ok = ops_ref[0, 3] != 0
+
+    @pl.when(ok & (old >= 0))
+    def _clear():
+        val_out[pl.ds(old, 1), :] = jnp.zeros((1, 1), jnp.int32)
+
+    @pl.when(ok)
+    def _set():
+        val_out[pl.ds(new, 1), :] = jnp.ones((1, 1), jnp.int32)
+        lba_out[pl.ds(new, 1), :] = jnp.full((1, 1), lba, jnp.int32)
+        pm_out[pl.ds(lba, 1), :] = jnp.full((1, 1), new, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_write(
+    page_map: jax.Array,  # [LBA] int32
+    slot_lba: jax.Array,  # [K, B] int32
+    valid: jax.Array,     # [K, B] bool
+    lba: jax.Array,       # [] int32
+    old_pm: jax.Array,    # [] int32, -1 = page had no mapping
+    dst_blk: jax.Array,   # [] int32
+    dst_slot: jax.Array,  # [] int32
+    *,
+    enabled: jax.Array | bool = True,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    kk, b = slot_lba.shape
+    new_pm = dst_blk * b + dst_slot
+    ops = jnp.stack(
+        [lba, old_pm, new_pm, jnp.asarray(enabled, jnp.int32)]
+    ).astype(jnp.int32)[None, :]
+    out = pl.pallas_call(
+        _apply_write_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((page_map.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((kk * b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((kk * b, 1), jnp.int32),
+        ),
+        input_output_aliases={1: 0, 2: 1, 3: 2},
+        interpret=interpret,
+    )(
+        ops,
+        page_map[:, None],
+        slot_lba.reshape(-1, 1),
+        valid.reshape(-1, 1).astype(jnp.int32),
+    )
+    pm_new, lba_new, val_new = out
+    return (
+        pm_new[:, 0],
+        lba_new[:, 0].reshape(kk, b),
+        val_new[:, 0].astype(valid.dtype).reshape(kk, b),
+    )

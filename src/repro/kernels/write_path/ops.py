@@ -1,0 +1,34 @@
+"""Public op: apply_write (Pallas on TPU, flat scalar lowering off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import apply_write as _apply_write_kernel
+from .ref import apply_write_flat, apply_write_ref
+
+
+def apply_write(page_map, slot_lba, valid, lba, old_pm, dst_blk, dst_slot):
+    """Fused fast-path write for core/simulator's split step: invalidate
+    the old physical slot of ``lba`` and append it at (dst_blk, dst_slot)
+    in one op over the three mapping pools.
+
+    On TPU the (lba, old_pm, new_pm) row feeds the Pallas scalar-prefetch
+    kernel with the pools aliased in place. Off-TPU the flattened
+    single-element lowering runs instead (identical math — asserted equal
+    to the 2-D reference and the interpret-mode kernel in
+    tests/test_kernels.py): this op sits inside the per-write ``lax.scan``
+    of a possibly-vmapped fleet, where interpret-mode grid emulation would
+    serialize the very hot path the fast-path split exists to speed up.
+    """
+    if jax.default_backend() == "tpu":
+        return _apply_write_kernel(
+            page_map, slot_lba, valid, lba, old_pm, dst_blk, dst_slot,
+            interpret=False,
+        )
+    return apply_write_flat(
+        page_map, slot_lba, valid, lba, old_pm, dst_blk, dst_slot
+    )
+
+
+__all__ = ["apply_write", "apply_write_ref", "apply_write_flat"]

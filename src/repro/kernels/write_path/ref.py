@@ -1,0 +1,69 @@
+"""Pure-jnp oracle + off-TPU lowering for the fused fast-path write.
+
+One application write on the simulator's fast path touches exactly three
+mapping structures: the old physical slot's valid bit (the invalidate), the
+destination slot's (lba, valid) pair (the append), and the packed
+logical→physical ``page_map`` entry. ``apply_write_ref`` is the obvious
+2-D-indexed formulation; ``apply_write_flat`` is the lowering the simulator
+uses off-TPU — every update is a single-element dynamic-update-slice on the
+FLATTENED pools, which XLA lowers natively (no scatter expansion, no
+capacity-sized masks) and which stays cheap under vmap.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_write_ref(
+    page_map: jax.Array,  # [LBA] int32 packed physical address, -1 unmapped
+    slot_lba: jax.Array,  # [K, B] int32 per-slot content (lba or -1)
+    valid: jax.Array,     # [K, B] bool per-slot liveness
+    lba: jax.Array,       # [] int32 page being written
+    old_pm: jax.Array,    # [] int32 page's old packed address (-1 = none)
+    dst_blk: jax.Array,   # [] int32 destination block (an OPEN active block)
+    dst_slot: jax.Array,  # [] int32 destination slot (the block's fill ptr)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Invalidate ``old_pm``, land ``lba`` at ``(dst_blk, dst_slot)``.
+
+    The destination is always a fresh slot strictly above the block's
+    current fill pointer, so it can never equal the old slot — the clear
+    and the set commute. Returns (page_map, slot_lba, valid).
+    """
+    b = slot_lba.shape[1]
+    has_old = old_pm >= 0
+    old_c = jnp.maximum(old_pm, 0)
+    ob, os = old_c // b, old_c % b
+    valid = valid.at[ob, os].set(jnp.where(has_old, False, valid[ob, os]))
+    new_pm = dst_blk * b + dst_slot
+    slot_lba = slot_lba.at[dst_blk, dst_slot].set(lba)
+    valid = valid.at[dst_blk, dst_slot].set(True)
+    page_map = page_map.at[lba].set(new_pm)
+    return page_map, slot_lba, valid
+
+
+def apply_write_flat(
+    page_map: jax.Array,
+    slot_lba: jax.Array,
+    valid: jax.Array,
+    lba: jax.Array,
+    old_pm: jax.Array,
+    dst_blk: jax.Array,
+    dst_slot: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flattened-index lowering of :func:`apply_write_ref` (CPU/GPU path).
+
+    ``old_pm`` IS the flat index of the old slot (the packed map stores
+    ``blk·B + slot``), so the invalidate needs no decode at all; a missing
+    old mapping is redirected out of bounds and dropped.
+    """
+    kk, b = slot_lba.shape
+    old_c = jnp.where(old_pm >= 0, old_pm, kk * b)
+    new_pm = (dst_blk * b + dst_slot).astype(page_map.dtype)
+    vflat = valid.reshape(-1)
+    vflat = vflat.at[old_c].set(False, mode="drop")
+    vflat = vflat.at[new_pm].set(True)
+    lflat = slot_lba.reshape(-1).at[new_pm].set(lba)
+    page_map = page_map.at[lba].set(new_pm)
+    return page_map, lflat.reshape(kk, b), vflat.reshape(kk, b)

@@ -215,3 +215,91 @@ class TestCompactSlots:
         )
         np.testing.assert_array_equal(np.asarray(den_l), np.asarray(ref_l))
         np.testing.assert_array_equal(np.asarray(den_v), np.asarray(ref_v))
+
+
+class TestWritePath:
+    """Fused fast-path write (invalidate + append + map repoint) backing the
+    simulator's split step: the flattened off-TPU lowering must match both
+    the 2-D reference and the interpret-mode Pallas kernel update-for-update."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=1000))
+    def test_kernel_matches_ref(self, seed):
+        from repro.kernels.write_path.kernel import apply_write
+        from repro.kernels.write_path.ref import (
+            apply_write_flat,
+            apply_write_ref,
+        )
+
+        rng = np.random.default_rng(seed)
+        k, b, lba_pages = 24, 8, 128
+        slot_lba = rng.integers(-1, lba_pages, (k, b)).astype(np.int32)
+        valid = rng.random((k, b)) < 0.5
+        page_map = rng.integers(-1, k * b, lba_pages).astype(np.int32)
+        lba = int(rng.integers(0, lba_pages))
+        old_pm = int(page_map[lba])
+        dst_blk = int(rng.integers(0, k))
+        # a write-shaped destination: never the page's own old slot
+        dst_slot = int(rng.integers(0, b))
+        while dst_blk * b + dst_slot == old_pm:
+            dst_slot = (dst_slot + 1) % b
+        args = (
+            jnp.asarray(page_map), jnp.asarray(slot_lba), jnp.asarray(valid),
+            jnp.asarray(lba), jnp.asarray(old_pm),
+            jnp.asarray(dst_blk), jnp.asarray(dst_slot),
+        )
+        ref_pm, ref_l, ref_v = apply_write_ref(*args)
+        flat_pm, flat_l, flat_v = apply_write_flat(*args)
+        ker_pm, ker_l, ker_v = apply_write(*args, interpret=True)
+        for got, ref, name in (
+            (flat_pm, ref_pm, "flat page_map"), (flat_l, ref_l, "flat slot_lba"),
+            (flat_v, ref_v, "flat valid"),
+            (ker_pm, ref_pm, "kernel page_map"), (ker_l, ref_l, "kernel slot_lba"),
+            (ker_v, ref_v, "kernel valid"),
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(ref), err_msg=name
+            )
+        assert flat_v.dtype == valid.dtype and ker_v.dtype == valid.dtype
+        # the new mapping is installed and the old slot is dead
+        assert int(flat_pm[lba]) == dst_blk * b + dst_slot
+        assert bool(flat_v[dst_blk, dst_slot])
+        if old_pm >= 0:
+            assert not bool(flat_v[old_pm // b, old_pm % b])
+
+    def test_unmapped_page_touches_nothing_old(self):
+        from repro.kernels.write_path.ref import (
+            apply_write_flat,
+            apply_write_ref,
+        )
+
+        k, b, lba_pages = 8, 4, 24
+        page_map = jnp.full(lba_pages, -1, jnp.int32)
+        slot_lba = jnp.full((k, b), -1, jnp.int32)
+        valid = jnp.zeros((k, b), bool)
+        for fn in (apply_write_ref, apply_write_flat):
+            pm, sl, va = fn(
+                page_map, slot_lba, valid,
+                jnp.asarray(5), jnp.asarray(-1),
+                jnp.asarray(2), jnp.asarray(0),
+            )
+            assert int(pm[5]) == 2 * b + 0
+            assert int(va.sum()) == 1 and bool(va[2, 0])
+            assert int(sl[2, 0]) == 5
+
+    def test_disabled_kernel_write_is_noop(self):
+        from repro.kernels.write_path.kernel import apply_write
+
+        rng = np.random.default_rng(0)
+        k, b, lba_pages = 8, 4, 24
+        page_map = jnp.asarray(rng.integers(-1, k * b, lba_pages), jnp.int32)
+        slot_lba = jnp.asarray(rng.integers(-1, lba_pages, (k, b)), jnp.int32)
+        valid = jnp.asarray(rng.random((k, b)) < 0.5)
+        pm, sl, va = apply_write(
+            page_map, slot_lba, valid,
+            jnp.asarray(3), jnp.asarray(5), jnp.asarray(1), jnp.asarray(2),
+            enabled=jnp.asarray(False), interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(pm), np.asarray(page_map))
+        np.testing.assert_array_equal(np.asarray(sl), np.asarray(slot_lba))
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(valid))
