@@ -17,7 +17,9 @@ version, backend, device count) so PR-over-PR comparisons are pinned to a
 host. ``--smoke`` runs a reduced grid for the CI lane
 (``scripts/run_tests.sh --bench-smoke``); ``--out PATH`` redirects the
 JSON (used by ``--bench-compare`` to diff a fresh run against the
-committed baseline without clobbering it).
+committed baseline without clobbering it); ``--only SUBSTR`` restricts
+the grid to matching cells (the ``--trim-smoke`` lane benches just the
+``tpcc_churn`` op-stream cells that way).
 """
 
 from __future__ import annotations
@@ -59,15 +61,21 @@ POLICIES = (
 )
 
 
-def grid_specs(geom: Geometry, writes: int, seeds=(0,)) -> list[DriveSpec]:
+def grid_specs(geom: Geometry, writes: int, seeds=(0,),
+               only: str | None = None) -> list[DriveSpec]:
     lba = geom.lba_pages
     workloads = (
         ("uniform", lambda: (W.uniform(lba, writes),)),
         ("two_modal", lambda: (W.two_modal(lba, writes),)),
         ("swap", lambda: tuple(W.swap_phases(lba, writes // 2))),
         ("tpcc", lambda: (W.tpcc_like(lba, writes),)),
+        # op-stream cells: the TPC-C insert/update/delete churn (TRIMs
+        # interleaved) — these exercise the WRITE/TRIM dispatch engine;
+        # the pure-write cells above keep their historical streams (the
+        # fleet partitions op-stream drives into their own sub-batch)
+        ("tpcc_churn", lambda: (W.tpcc_churn(lba, writes),)),
     )
-    return [
+    specs = [
         DriveSpec(
             preset(), wl(), seed=seed, name=f"{pname}/{wname}#{seed}"
         )
@@ -75,14 +83,18 @@ def grid_specs(geom: Geometry, writes: int, seeds=(0,)) -> list[DriveSpec]:
         for pname, preset in POLICIES
         for wname, wl in workloads
     ]
+    if only:
+        specs = [s for s in specs if only in s.name]
+        assert specs, f"--only {only!r} matched no grid cell"
+    return specs
 
 
 def run(full: bool = False, smoke: bool = False,
-        out_path: str | None = None) -> dict:
+        out_path: str | None = None, only: str | None = None) -> dict:
     geom = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8)
     writes = 60_000 if full else (4_000 if smoke else 20_000)
-    seeds = (0,) if smoke else (0, 1)  # 4 policies × 4 workloads × seeds
-    specs = grid_specs(geom, writes, seeds)
+    seeds = (0,) if smoke else (0, 1)  # 4 policies × 5 workloads × seeds
+    specs = grid_specs(geom, writes, seeds, only=only)
 
     # -- fleet path: warm the jit cache, then time steady-state ------------
     # trace stride: the grid's WA analysis samples windows of writes//10,
@@ -101,14 +113,16 @@ def run(full: bool = False, smoke: bool = False,
 
     # -- loop path: same grid, per-drive managers.simulate, timed per drive
     # (per policy×workload cell steps/sec). Warm each DISTINCT jit
-    # signature first — the compiled shape includes the scan length AND the
-    # drive's group count (from the first phase's group structure), so the
-    # warm key carries both; warming at a reduced write count would leave
-    # every timed cell paying XLA compilation (and cells would not be
-    # comparable across modes).
+    # signature first — the compiled shape includes the scan length, the
+    # drive's group count (from the first phase's group structure), AND
+    # whether the op-stream engine is traced (trim-bearing phases), so the
+    # warm key carries all three; warming at a reduced write count would
+    # leave every timed cell paying XLA compilation (and cells would not
+    # be comparable across modes).
     for s in {
         (s.mcfg.name,
-         tuple((ph.n_writes, len(ph.sizes)) for ph in s.phases)): s
+         tuple((ph.n_writes, len(ph.sizes), ph.has_trim)
+               for ph in s.phases)): s
         for s in specs
     }.values():
         M.simulate(geom, s.mcfg, list(s.phases), seed=0)
@@ -227,4 +241,8 @@ if __name__ == "__main__":
     out = None
     if "--out" in sys.argv:
         out = sys.argv[sys.argv.index("--out") + 1]
-    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv, out_path=out)
+    only = None
+    if "--only" in sys.argv:  # cell filter, e.g. --only tpcc_churn
+        only = sys.argv[sys.argv.index("--only") + 1]
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv,
+        out_path=out, only=only)

@@ -9,6 +9,12 @@ one call. Alongside each simulated WA the closed-form model prediction
 reported with its relative error — model-vs-simulation across the whole
 grid in one pass.
 
+The grid carries a TRIM axis: utilization-sweep drives hold a fraction
+t of the logical span trimmed at steady state (op-stream engine), and the
+report prints simulated WA against the Frankie effective-OP prediction
+``wa_from_op_ratio(effective_op_ratio(r, t))`` — trimmed space is dynamic
+over-provisioning, so WA falls with t along the model curve.
+
     PYTHONPATH=src python examples/fleet_sweep.py --writes 20000 --seeds 2
 """
 
@@ -16,6 +22,7 @@ import argparse
 
 import numpy as np
 
+from repro.core import analytics as A
 from repro.core import managers as M
 from repro.core import workloads as W
 from repro.core.fleet import DriveSpec, simulate_fleet
@@ -70,6 +77,36 @@ def main():
             for mn, _ in managers
         }
         print(f"\n{wn}: " + "  ".join(f"{k}={v:.3f}" for k, v in wa.items()))
+
+    # -- TRIM sweep: utilization × trim-rate in one op-stream fleet ---------
+    # Frankie et al.: trimmed space is dynamic OP, so the LRU single-group
+    # drive should track wa_from_op_ratio(effective_op_ratio(r, t)).
+    trim_fracs = (0.0, 0.1, 0.25, 0.5)
+    import dataclasses
+    mcfg = dataclasses.replace(M.single_group(), gc_policy="lru")
+    trim_specs = [
+        DriveSpec(mcfg, (W.trimmed(W.uniform(lba, args.writes), t),),
+                  seed=11, name=f"single-lru/trim={t}")
+        for t in trim_fracs
+    ]
+    trim_fleet = simulate_fleet(geom, trim_specs, sampler="jax",
+                                devices=args.devices)
+    # reserve-adjusted base utilization, as in the Fig.-1 equilibrium test
+    ppb = geom.pages_per_block
+    usable = geom.pba_pages - 3 * ppb
+    print("\nTRIM sweep (single-group LRU, Frankie effective-OP model):")
+    errs = []
+    for i, t in enumerate(trim_fracs):
+        t_meas = trim_fleet.trim_fraction()[i]
+        wa_sim = float(np.mean(trim_fleet.result(i).wa_curve(window)[-3:]))
+        wa_model = float(A.wa_from_op_ratio(
+            A.effective_op_ratio(geom.lba_pages / usable, t_meas)
+        ))
+        errs.append((wa_sim - wa_model) / wa_model)
+        print(f"  t={t:4.2f} (measured {t_meas:5.3f})  WA_sim={wa_sim:6.3f}  "
+              f"WA_model={wa_model:6.3f}  err={errs[-1]:+7.1%}")
+    print(f"trim-sweep model vs simulation: mean |rel err| = "
+          f"{np.mean(np.abs(errs)):.1%}, worst = {np.max(np.abs(errs)):.1%}")
 
 
 if __name__ == "__main__":

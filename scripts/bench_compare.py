@@ -43,11 +43,21 @@ def compare(base: dict, fresh: dict, tol: float) -> int:
     key = "steps_per_sec_loop"
     b_cells, f_cells = base.get("cells", {}), fresh.get("cells", {})
     min_sec = 0.25  # cells timed faster than this are scheduler noise
+    one_sided = 0
     for name in sorted(set(b_cells) | set(f_cells)):
+        # a cell present on only one side (grid grew or shrank between
+        # runs — e.g. new op-stream workloads) is REPORT-ONLY: there is
+        # nothing to diff, and a changed grid must never fail the gate
         if name not in b_cells or name not in f_cells:
-            rows.append((name, "—", "—", "missing on one side"))
+            side = "baseline" if name in b_cells else "fresh"
+            rows.append((name, "—", "—", f"only in {side} run (not gated)"))
+            one_sided += 1
             continue
-        old, new = b_cells[name][key], f_cells[name][key]
+        old = b_cells[name].get(key)
+        new = f_cells[name].get(key)
+        if old is None or new is None:
+            rows.append((name, "—", "—", f"no {key} field (not gated)"))
+            continue
         ratio = new / old if old else float("inf")
         flag = ""
         too_fast = min(
@@ -70,10 +80,16 @@ def compare(base: dict, fresh: dict, tol: float) -> int:
             failures.append(f"fleet: {old_f:.0f} → {new_f:.0f} steps/s")
         rows.append(("<batched fleet>", f"{old_f:.0f}", f"{new_f:.0f}", flag))
 
+    if not rows:
+        print("no cells on either side — nothing to compare")
+        return 0
     w = max(len(r[0]) for r in rows)
     print(f"{'cell'.ljust(w)}  {'baseline':>10}  {'fresh':>10}")
     for name, old, new, flag in rows:
         print(f"{name.ljust(w)}  {old:>10}  {new:>10}  {flag}")
+    if one_sided:
+        print(f"({one_sided} cell(s) present on only one side — "
+              "reported, never gated)")
 
     if failures and gate:
         print(f"\nFAIL: >{tol:.0%} throughput regression:")

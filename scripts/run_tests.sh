@@ -2,7 +2,11 @@
 # Tier-1 test entry point.
 #
 #   scripts/run_tests.sh                # full suite
-#   scripts/run_tests.sh --fast         # skip @pytest.mark.slow (multi-minute kernel sweeps)
+#   scripts/run_tests.sh --fast         # skip @pytest.mark.slow (multi-minute kernel
+#                                       # sweeps) + the trim-smoke bench cell
+#   scripts/run_tests.sh --trim-smoke   # TRIM/op-stream lane: the engine-equivalence
+#                                       # + invariant tests marked `trim`, plus one
+#                                       # op-stream bench cell (tpcc_churn)
 #   scripts/run_tests.sh --bench-smoke  # reduced fleet benchmark → BENCH_fleet.json
 #   scripts/run_tests.sh --bench-compare  # fresh smoke run diffed against the
 #                                         # committed BENCH_fleet.json; fails on
@@ -21,6 +25,28 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     exec python benchmarks/bench_fleet.py --smoke
 fi
 
+trim_bench_cell() {
+    # one op-stream bench cell: the tpcc_churn column of the smoke grid,
+    # written to a scratch file (committed baselines stay untouched)
+    export PYTHONPATH=".:${PYTHONPATH}"
+    local scratch status=0
+    scratch="$(mktemp /tmp/bench_trim.XXXXXX.json)"
+    python benchmarks/bench_fleet.py --smoke --only tpcc_churn \
+        --out "$scratch" || status=$?
+    rm -f "$scratch"
+    return "$status"
+}
+
+if [[ "${1:-}" == "--trim-smoke" ]]; then
+    # focused TRIM lane: every test marked `trim` (op-stream equivalence,
+    # interleaved-trim invariants, the effective-OP acceptance sweep),
+    # then one trim bench cell. The default --fast lane subsumes this:
+    # the `trim` tests are not `slow`, and --fast appends the same cell.
+    python -m pytest -q -m trim
+    trim_bench_cell
+    exit 0
+fi
+
 if [[ "${1:-}" == "--bench-compare" ]]; then
     # regression gate: run the smoke grid to a scratch file (the committed
     # baselines are left untouched) and diff per-cell throughput against
@@ -36,9 +62,12 @@ if [[ "${1:-}" == "--bench-compare" ]]; then
     exec python scripts/bench_compare.py "$baseline" "$fresh" --tol 0.25
 fi
 
-args=()
 if [[ "${1:-}" == "--fast" ]]; then
     shift
-    args+=(-m "not slow")
+    # the trim-smoke tests ride along here (-m "not slow" includes every
+    # `trim`-marked test); the lane's bench cell runs after the suite
+    python -m pytest -q -m "not slow" "$@"
+    trim_bench_cell
+    exit 0
 fi
-exec python -m pytest -q "${args[@]}" "$@"
+exec python -m pytest -q "$@"

@@ -35,6 +35,8 @@ __all__ = [
     "delta_from_wa",
     "wa_from_op_ratio",
     "op_ratio_from_wa",
+    "effective_op_ratio",
+    "wa_with_trim",
     "lambertw0",
 ]
 
@@ -118,6 +120,40 @@ def wa_from_op_ratio(r: jax.Array, *, iters: int = 80) -> jax.Array:
 def op_ratio_from_wa(wa: jax.Array) -> jax.Array:
     """r = LBA/PBA needed to hit a target equilibrium WA (closed form via eq. 3)."""
     return op_ratio_from_delta(delta_from_wa(wa))
+
+
+# ---------------------------------------------------------------------------
+# TRIM as dynamic over-provisioning (Frankie et al., arXiv:1208.1794;
+# object-based variant arXiv:1210.5975)
+# ---------------------------------------------------------------------------
+
+def effective_op_ratio(r: jax.Array, trim_frac: jax.Array) -> jax.Array:
+    """Effective utilization ratio when a fraction ``trim_frac`` of the
+    logical span is held TRIMMED.
+
+    A trimmed page occupies no physical slot, so the drive's live content
+    shrinks to (1 - t)·LBA while PBA is unchanged — the freed span is
+    indistinguishable from factory over-provisioning to the GC:
+
+        r_eff = (1 - t)·LBA / PBA = r·(1 - t)
+        OP_eff = PBA - (1 - t)·LBA = OP + t·LBA
+
+    Compose with :func:`wa_from_op_ratio` for the equilibrium WA at a
+    given steady-state trim fraction (or use :func:`wa_with_trim`).
+    Broadcasting elementwise, like every function in this module, so a
+    whole utilization × trim-rate grid evaluates in one call.
+    """
+    r = jnp.asarray(r)
+    trim_frac = jnp.asarray(trim_frac)
+    return r * (1.0 - trim_frac)
+
+
+def wa_with_trim(r: jax.Array, trim_frac: jax.Array, *,
+                 iters: int = 80) -> jax.Array:
+    """Equilibrium WA of a uniform workload at utilization ``r`` holding a
+    ``trim_frac`` fraction of the logical span trimmed: eq. 3 evaluated at
+    the Frankie effective OP ratio."""
+    return wa_from_op_ratio(effective_op_ratio(r, trim_frac), iters=iters)
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,13 @@ Two execution details that matter on real hardware:
 Geometry is shared at the SHAPE level (array sizes: blocks, pages/block,
 logical span, group slots); within that shape, drives vary utilization and
 locality through their phase mix (e.g. a zero-probability cold tail emulates
-a shorter logical span at identical state shapes).
+a shorter logical span at identical state shapes) — and, as of the op-stream
+engine, through TRIMs: drives whose phases carry ``trim_probs`` run the
+WRITE/TRIM dispatch step in their own sub-batch (``_part_key``), so one
+fleet sweeps utilization × trim-rate × policy while pure-write drives keep
+their exact historical streams and step. ``FleetResult.trim_fraction()`` /
+``predicted_wa()`` read the carried effective-utilization counters for the
+Frankie-style effective-OP analytics.
 """
 
 from __future__ import annotations
@@ -120,17 +126,31 @@ class FleetResult:
             [self.result(i).wa_curve(window) for i in range(len(self.specs))]
         )
 
-    # -- closed-form analytics (paper eq. 3/5) ------------------------------
+    # -- closed-form analytics (paper eq. 3/5 + Frankie effective OP) -------
+
+    def trim_fraction(self) -> np.ndarray:
+        """[B] fraction of the logical span each drive holds TRIMMED at its
+        final state (0.0 for pure-write drives) — read off the carried
+        ``mapped_pages`` counter, no page_map reduction."""
+        assert self.geom is not None, "fleet built without geometry"
+        lba = self.geom.lba_pages
+        return np.array([
+            1.0 - float(self.state(i)["mapped_pages"]) / lba
+            for i in range(len(self.specs))
+        ])
 
     def predicted_wa(self) -> np.ndarray:
         """[B] closed-form model WA per drive at its final operating point.
 
-        Each active group is treated as a uniform sub-SSD of logical size
-        ``grp_size`` with over-provisioning ``grp_alloc·B − grp_size``, so
-        its δ solves eq. 4 (≡ eq. 3 per group); the drive prediction is the
-        frequency-weighted sum of the per-group WAs (eq. 5), weighted by
-        the measured EWMA frequencies. A single-group drive degenerates to
-        the plain eq. 3 equilibrium model.
+        Each active group is treated as a uniform sub-SSD of EFFECTIVE
+        logical size ``grp_live`` (mapped pages — trimmed pages act as
+        dynamic over-provisioning, Frankie et al.) with over-provisioning
+        ``grp_alloc·B − grp_live``, so its δ solves eq. 4 (≡ eq. 3 per
+        group); the drive prediction is the frequency-weighted sum of the
+        per-group WAs (eq. 5), weighted by the measured EWMA frequencies.
+        A single-group pure-write drive degenerates to the plain eq. 3
+        equilibrium model; a trimmed one to eq. 3 at the post-trim
+        utilization (``effective_op_ratio``).
         """
         from repro.core.allocation import total_wa
 
@@ -140,7 +160,7 @@ class FleetResult:
         for i in range(len(self.specs)):
             st = self.state(i)
             active = np.asarray(st["grp_active"])
-            s = np.asarray(st["grp_size"], np.float64)
+            s = np.asarray(st["grp_live"], np.float64)  # effective sizes
             op_x = np.asarray(st["grp_alloc"], np.float64) * b - s
             p = np.where(active, np.asarray(st["grp_p"], np.float64), 0.0)
             if p.sum() <= 0.0:  # no interval completed yet: weight by size
@@ -160,6 +180,9 @@ class FleetResult:
                     pred: np.ndarray | None = None) -> np.ndarray:
         """[B] relative error of the eq. 3/5 prediction vs the simulated
         equilibrium WA (mean of the last ``tail`` windows per drive).
+        The prediction consumes each drive's effective (post-trim)
+        utilization — ``grp_live``/``grp_alloc`` at the final state — so
+        trimmed and pure-write drives are judged by the same model.
 
         pred: pass a precomputed :meth:`predicted_wa` to avoid running the
         per-drive closed-form pass twice.
@@ -177,23 +200,31 @@ def _stack(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
-def _part_key(s: DriveSpec) -> tuple[str, bool, bool, bool]:
+def _spec_has_trim(s: DriveSpec) -> bool:
+    return any(ph.has_trim for ph in s.phases)
+
+
+def _part_key(s: DriveSpec) -> tuple[str, bool, bool, bool, bool]:
     """Sub-batch partition key: step STRUCTURE a drive's compiled scan must
     carry. A vmapped lax.cond lowers to a select over both branches, so
     machinery any drive of a sub-batch carries is machinery every drive of
     that sub-batch executes per step. Keying on (detector, movement ops,
-    dynamic groups, closed-form allocation) keeps the [G, bits] filter
-    pair and §5.6 demotion machinery out of static-detector drives, the
-    movement-op compaction (a second full GC drain per step) out of
-    fdp/single-style drives, and the §5.2/eq.-8 interval machinery (two
+    dynamic groups, closed-form allocation, op stream) keeps the [G, bits]
+    filter pair and §5.6 demotion machinery out of static-detector drives,
+    the movement-op compaction (a second full GC drain per step) out of
+    fdp/single-style drives, the §5.2/eq.-8 interval machinery (two
     argsorts + an 80-iteration bisection per interval) out of drives that
-    never run it. The detector is part of the key, so every sub-batch is
-    td-homogeneous and the simulator dispatches it at trace time."""
+    never run it, and the WRITE/TRIM dispatch (plus its per-drive §5.1
+    interval predicate) out of pure-write drives — which also keeps their
+    device-sampled streams bit-identical to the pre-op-stream engine. The
+    detector is part of the key, so every sub-batch is td-homogeneous and
+    the simulator dispatches it at trace time."""
     return (
         s.mcfg.td_mode,
         s.mcfg.movement_ops,
         s.mcfg.dynamic_groups,
         s.mcfg.alloc_mode in ("wolf", "optimal", "fdp_assumed"),
+        _spec_has_trim(s),
     )
 
 
@@ -203,22 +234,32 @@ def _shard_runner(ctx: SimContext, n_total: int, on_device_sampler: bool,
     """Compiled runner for one sub-batch: vmap within a device shard,
     pmap across shards when n_dev > 1."""
 
-    def run_one(st, stream, params, page_rate, policy):
+    def run_one(st, stream, params, page_rate, page_group0, policy):
+        ops = None
         if on_device_sampler:
-            lbas = sample_phases_device(stream, params, n_total)
+            if ctx.with_trim:
+                ops, lbas = sample_phases_device(
+                    stream, params, n_total, with_ops=True
+                )
+            else:
+                lbas = sample_phases_device(stream, params, n_total)
+        elif ctx.with_trim:
+            ops, lbas = stream
         else:
             lbas = stream
         cum = jnp.cumsum(params["counts"])
 
         def rate_fn(s, lba, t):
+            # t is the shared EVENT clock (== write clock for pure-write
+            # sub-batches); phase boundaries are event counts either way
             ph = jnp.minimum(
                 jnp.searchsorted(cum, t, side="right"), cum.shape[0] - 1
             )
             return page_rate[ph, lba]
 
-        step = make_step(ctx, policy, rate_fn)
-        ts = jnp.arange(n_total, dtype=jnp.int32)  # shared write clock
-        st, trace = scan_writes(ctx, step, st, lbas, ts)
+        step = make_step(ctx, policy, rate_fn, page_group0)
+        ts = jnp.arange(n_total, dtype=jnp.int32)
+        st, trace = scan_writes(ctx, step, st, lbas, ts, ops)
         return st, trace, lbas
 
     batched = jax.vmap(run_one)
@@ -251,6 +292,7 @@ def simulate_fleet(
     fast_path: bool = False,
     trace_every: int = 1,
     unroll: int = 1,
+    ops_stream: bool | None = None,
 ) -> FleetResult:
     """Run B independent drives in a single jitted vmap(lax.scan).
 
@@ -258,6 +300,13 @@ def simulate_fleet(
     region (fast path); "numpy" replays the exact host streams
     ``managers.simulate`` would draw for the same (phases, seed) — the two
     paths then agree elementwise, which tests/test_fleet.py asserts.
+
+    ops_stream: None (default) routes each drive through the op-stream
+    engine iff its phases carry TRIMs (the partition key separates them,
+    so pure-write drives keep their exact historical streams and step);
+    True forces EVERY drive through the op engine — with the numpy
+    sampler the events are then draw-for-draw identical on pure-write
+    phases, the bit-compatibility anchor of tests/test_write_engine.py.
 
     devices: None/1 = pure single-device vmap; "auto" = shard over all
     jax.devices(); int = shard over that many. Shard count is clamped to a
@@ -282,6 +331,10 @@ def simulate_fleet(
     assert specs, "empty fleet"
     if sampler not in ("jax", "numpy"):
         raise ValueError(f"unknown sampler {sampler!r}")
+    if ops_stream is False:  # mirror managers.simulate: fail loudly
+        assert not any(_spec_has_trim(s) for s in specs), (
+            "specs carry TRIMs: ops_stream=False is not available"
+        )
     totals = {sum(ph.n_writes for ph in s.phases) for s in specs}
     assert len(totals) == 1, f"drives must issue equal write totals: {totals}"
     n_total = totals.pop()
@@ -302,10 +355,16 @@ def simulate_fleet(
     p_max = max(len(s.phases) for s in specs)
     g_wl = max(len(ph.sizes) for s in specs for ph in s.phases)
 
+    def part_key(s: DriveSpec):
+        key = _part_key(s)
+        if ops_stream:  # force every drive onto the op engine
+            key = key[:-1] + (True,)
+        return key
+
     partitions: list[tuple[tuple, list[int]]] = []
-    for key in sorted({_part_key(s) for s in specs}):
+    for key in sorted({part_key(s) for s in specs}):
         partitions.append(
-            (key, [i for i, s in enumerate(specs) if _part_key(s) == key])
+            (key, [i for i, s in enumerate(specs) if part_key(s) == key])
         )
 
     n_trace = n_total // trace_every
@@ -313,7 +372,8 @@ def simulate_fleet(
     mig = np.zeros((len(specs), n_trace), np.int32)
     lbas_out = np.zeros((len(specs), n_total), np.int32) if return_lbas else None
     shards = []
-    for (td_mode, use_movement, use_dynamic, use_closed), idx in partitions:
+    for key, idx in partitions:
+        td_mode, use_movement, use_dynamic, use_closed, with_trim = key
         use_bloom = td_mode == "bloom"
         can_demote = td_mode != "static"
         sub = [specs[i] for i in idx]
@@ -328,13 +388,15 @@ def simulate_fleet(
             len({s.mcfg.interval_frac for s in sub}) > 1
         )
         sts, policies, page_rates, params, streams = [], [], [], [], []
+        page_groups = []
         n_groups_max = 1
         for s in sub:
-            st, n_groups, assumed_p, fdp_rate, rates = build_drive(
+            st, n_groups, assumed_p, fdp_rate, rates, pg0 = build_drive(
                 geom, s.mcfg, list(s.phases),
                 init_p_from_phase=init_p_from_phase,
                 g_max=g_max, use_bloom=use_bloom,
             )
+            page_groups.append(pg0)
             n_groups_max = max(n_groups_max, n_groups)
             ctx_d = SimContext(
                 geom, dataclasses.replace(s.mcfg, max_groups=g_max),
@@ -357,7 +419,18 @@ def simulate_fleet(
             params.append(
                 phase_param_arrays(list(s.phases), g_max=g_wl, p_max=p_max)
             )
-            if sampler == "numpy":
+            if sampler == "numpy" and with_trim:
+                # exact host op streams (Phase.sample_ops: pure-write
+                # phases consume the draws Phase.sample would)
+                rng = np.random.default_rng(s.seed)
+                pairs = [ph.sample_ops(rng) for ph in s.phases]
+                streams.append((
+                    jnp.asarray(np.concatenate([o for o, _ in pairs]),
+                                jnp.int32),
+                    jnp.asarray(np.concatenate([l for _, l in pairs]),
+                                jnp.int32),
+                ))
+            elif sampler == "numpy":
                 rng = np.random.default_rng(s.seed)
                 streams.append(
                     jnp.asarray(
@@ -397,13 +470,15 @@ def simulate_fleet(
             use_closed_alloc=use_closed,
             trace_every=trace_every,
             unroll=unroll,
+            with_trim=with_trim,
         )
         args = (
             _stack(sts),
-            jnp.stack(streams),
+            _stack(streams),
             {k: jnp.asarray(np.stack([p[k] for p in params]))
              for k in params[0]},
             jnp.asarray(np.stack(page_rates)),
+            jnp.asarray(np.stack(page_groups)),
             _stack(policies),
         )
         d = n_dev

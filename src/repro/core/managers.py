@@ -79,7 +79,10 @@ class RunResult:
         writes (k·window, (k+1)·window], boundaries the strided trace
         samples exactly (window must be a multiple of the stride; a
         stride-E trace at element j equals the dense trace at step
-        (j+1)·E - 1, so curves agree elementwise across strides).
+        (j+1)·E - 1, so curves agree elementwise across strides). For an
+        op stream the scan steps are EVENTS (writes + trims), so a window
+        covers ``window`` events and Δapp counts just its writes — the
+        WA ratio stays exact, only the window boundary unit changes.
         """
         assert window % self.stride == 0, (window, self.stride)
         w = window // self.stride
@@ -126,7 +129,9 @@ def build_drive(
     non-bloom drives must share it fleet-wide).
 
     Returns (st, n_groups, assumed_p [g_max], fdp_rate [g_max],
-    page_rates [P, LBA] — the true per-page update rate of every phase).
+    page_rates [P, LBA] — the true per-page update rate of every phase —
+    and page_group0 [LBA], the layout group of every logical page: the
+    residence group a write that re-maps a TRIMMED page lands in).
     """
     import jax.numpy as jnp
 
@@ -155,7 +160,7 @@ def build_drive(
         phase.page_rate() if n_groups > 1 else uniform_rate
         for phase in phases
     ])
-    return st, n_groups, assumed_p, fdp_rate, page_rates
+    return st, n_groups, assumed_p, fdp_rate, page_rates, page_group
 
 
 def simulate(
@@ -169,6 +174,7 @@ def simulate(
     fast_path: bool = True,
     trace_every: int = 1,
     unroll: int = 1,
+    ops_stream: bool | None = None,
 ) -> RunResult:
     """Run a (possibly multi-phase) workload under a manager preset.
 
@@ -178,10 +184,20 @@ def simulate(
     (tests/test_write_engine.py asserts it agrees with the split engine).
     trace_every / unroll: trace stride and scan unroll factor
     (simulator.scan_writes); trace_every must divide every phase length.
+    ops_stream: None (default) routes through the op-stream engine iff any
+    phase carries TRIMs; True forces it for pure-write phases too — the
+    sampled events are then identical (Phase.sample_ops consumes the same
+    draws), which tests/test_write_engine.py uses to pin the op engine
+    bit-identical to the write engine on all-WRITE streams.
     """
     rng = np.random.default_rng(seed)
-    st, n_groups, assumed_p, fdp_rate, page_rates = build_drive(
+    st, n_groups, assumed_p, fdp_rate, page_rates, page_group0 = build_drive(
         geom, mcfg, phases, init_p_from_phase=init_p_from_phase
+    )
+    if ops_stream is None:
+        ops_stream = any(ph.has_trim for ph in phases)
+    assert ops_stream or not any(ph.has_trim for ph in phases), (
+        "phases carry TRIMs: ops_stream=False is not available"
     )
     ctx = SimContext(
         geom, mcfg, n_groups, use_bloom=mcfg.td_mode == "bloom",
@@ -191,13 +207,20 @@ def simulate(
         use_dynamic=mcfg.dynamic_groups,
         use_closed_alloc=mcfg.alloc_mode in ("wolf", "optimal", "fdp_assumed"),
         trace_every=trace_every, unroll=unroll,
+        with_trim=ops_stream,
     )
     apps, migs = [], []
     for phase, page_rate in zip(phases, page_rates):
-        lbas = phase.sample(rng)
+        kw = {}
+        if ops_stream:
+            ops, lbas = phase.sample_ops(rng)
+            kw = dict(ops=ops, page_group0=page_group0)
+        else:
+            lbas = phase.sample(rng)
         st, trace = run(
             ctx, st, lbas,
             page_rate=page_rate, assumed_p=assumed_p, fdp_rate=fdp_rate,
+            **kw,
         )
         apps.append(np.asarray(trace["app"]))
         migs.append(np.asarray(trace["mig"]))

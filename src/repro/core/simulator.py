@@ -1,15 +1,52 @@
-"""Write-granularity SSD simulator (jittable, lax.scan over writes).
+"""Event-granularity SSD simulator (jittable, lax.scan over an op stream).
 
-One scan step = one application write:
+One scan step = one application event. The engine is an OP-STREAM engine:
+an event is ``(op, lba)`` with ``op ∈ {OP_WRITE, OP_TRIM}`` (pure-write
+contexts scan bare ``lba`` streams — see the bit-compatibility note
+below). A WRITE:
   1. invalidate the page's old physical slot (one gather in the packed
      ``page_map``),
-  2. pick the target group (temperature detection, §5.6 / oracle),
+  2. pick the target group (temperature detection, §5.6 / oracle; a page
+     re-mapped after a TRIM inherits its workload layout group via
+     ``page_group0``),
   3. garbage-collect inside the group if it's out of budgeted space (§5.4),
   4. append the page to the group's active block,
   5. every h writes: interval bookkeeping (§5.1) — EWMA update frequencies,
      re-allocate over-provisioning (§5.5), create/merge groups (§5.2),
   6. movement operations (§5.3): ≤1 proactive compaction GC per step on the
      most block-surplus group, donating redeemed blocks to the pool.
+A TRIM unmaps the page and kills its physical slot (:func:`_trim_page`,
+one fused ``kernels/write_path.apply_trim`` op + O(1) carried-counter
+updates). It frees space, so it can never trip the GC / valve / movement
+predicates, and it completes no application write, so it never closes a
+§5.1 interval — TRIM has only a fast path.
+
+Architecture (op-stream layer):
+
+* **TRIM is dynamic over-provisioning** (Frankie et al., arXiv:1208.1794).
+  ``SimState`` carries ``mapped_pages`` (scalar == mapped LBAs) and
+  ``grp_live`` ([G] == mapped pages per group), maintained at every
+  map/unmap/GC site and cross-checked by ``SimState.check_invariants``.
+  The §5.5 allocator and the detector hit rates consume these EFFECTIVE
+  group sizes, so trimmed space automatically re-enters the OP budgets at
+  the next §5.1 interval and equilibrium WA tracks
+  ``analytics.wa_from_op_ratio(effective_op_ratio(r, t))``
+  (tests/test_trim.py).
+
+* **Bit-compatibility with pure-write runs.** ``SimContext.with_trim``
+  is static: ``False`` (default) traces the historical (lba, t) step —
+  pure-write fleets keep their exact streams, step structure, and scalar
+  §5.1 interval predicate, so results are bit-identical to the
+  pre-op-stream engine at zero cost. ``True`` scans (op, lba, t) triples;
+  an all-WRITE op stream still reproduces the pure-write run
+  bit-identically (state, counters, WA curves — asserted under jit and
+  vmap in tests/test_write_engine.py) because a WRITE event executes the
+  identical write body; only the interval predicate reads the carried
+  ``n_app`` instead of the scan clock (equal values on all-WRITE
+  streams, where n_app == t+1 at the read). Under vmap the op dispatch
+  is a select and the §5.1 predicate is per-drive, which is why
+  ``core/fleet.py`` partitions trim-bearing drives into their own
+  sub-batches.
 
 Architecture (post fast-path refactor — see also the bulk-GC notes below):
 
@@ -123,8 +160,9 @@ from repro.core.ssd import (
     bloom_bits,
     surplus_of,
 )
+from repro.core.workloads import OP_TRIM
 from repro.kernels.gc_compact.ops import compact_slots
-from repro.kernels.write_path.ops import apply_write
+from repro.kernels.write_path.ops import apply_trim, apply_write
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -171,6 +209,14 @@ class SimContext:
     # step engine: True = fast-path/heavy-path split (default); False = the
     # seed-shaped single-path step, kept as the step-equivalence oracle
     fast_path: bool = True
+    # op-stream mode: when True the scan consumes (op, lba) events and the
+    # step dispatches WRITE/TRIM (both engines). Static because it gates
+    # traced structure AND the interval clock: pure-write contexts keep the
+    # scalar ((t+1) % h) predicate (t unbatched under vmap), op contexts
+    # read the carried n_app (write counts diverge across drives once
+    # trims interleave, so the §5.1 predicate is per-drive there). False
+    # traces the EXACT pre-op-stream step — pure-write fleets pay nothing.
+    with_trim: bool = False
     # static because they gate traced STRUCTURE (like use_bloom): when False
     # the movement-op / §5.6-demotion / §5.2-dynamic-group / closed-form-
     # allocation machinery is structurally absent from the compiled step,
@@ -258,8 +304,9 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
 # every field any GC drain (bulk or reference) can touch
 _GC_FIELDS = (
     "page_map", "slot_lba", "valid", "live", "fill", "stamp", "state",
-    "group_of", "active_blk", "grp_size", "grp_phys", "grp_surplus",
-    "free_blocks", "clock", "n_mig", "n_dropped", "n_erase",
+    "group_of", "active_blk", "grp_size", "grp_live", "grp_phys",
+    "grp_surplus", "free_blocks", "mapped_pages", "clock", "n_mig",
+    "n_dropped", "n_erase",
 )
 # fields the in-write block allocation (_pop_free_block + seal) can touch
 _ALLOC_FIELDS = (
@@ -270,8 +317,8 @@ _ALLOC_FIELDS = (
 # can touch — group stats plus the block relabel/seal of a merge
 _INTERVAL_FIELDS = (
     "grp_p", "grp_writes", "interval", "cooldown", "grp_active",
-    "grp_size", "grp_phys", "grp_alloc", "grp_surplus", "grp_created",
-    "group_of", "state", "active_blk",
+    "grp_size", "grp_live", "grp_phys", "grp_alloc", "grp_surplus",
+    "grp_created", "group_of", "state", "active_blk",
 )
 # everything the post-target-selection write step (fast append OR the whole
 # heavy tail) can touch: all state except the bloom filter triple, which
@@ -280,6 +327,9 @@ _STEP_FIELDS = tuple(
     f for f in SimState.__dataclass_fields__
     if f not in ("bloom_active", "bloom_passive", "bloom_writes")
 )
+# the op-stream WRITE/TRIM dispatch selects over everything: the write
+# branch contains target selection, which owns the bloom triple
+_OP_FIELDS = tuple(SimState.__dataclass_fields__)
 
 
 def _fields_of(st: SimState, fields):
@@ -400,6 +450,8 @@ def _write_page(ctx: SimContext, st: SimState, lba, g, *, is_migration: bool,
                       jnp.where(enabled, -1, st.page_map[lba]))
         ),
         grp_size=st.grp_size.at[g].add(jnp.where(ok, 1, 0)),
+        grp_live=st.grp_live.at[g].add(jnp.where(ok, 1, 0)),
+        mapped_pages=st.mapped_pages + jnp.where(ok, 1, 0),
         n_dropped=st.n_dropped + jnp.where(ok | jnp.logical_not(enabled), 0, 1),
     )
     if is_migration:
@@ -415,14 +467,15 @@ def _invalidate(ctx: SimContext, st: SimState, lba):
     blk_c = pm_c // b
     slot = pm_c % b
     old_g = st.group_of[blk_c]
+    d_g = jnp.where(has & (old_g >= 0), -1, 0)
     st = st.replace(
         valid=st.valid.at[blk_c, slot].set(
             jnp.where(has, False, st.valid[blk_c, slot])
         ),
         live=st.live.at[blk_c].add(jnp.where(has, -1, 0)),
-        grp_size=st.grp_size.at[jnp.maximum(old_g, 0)].add(
-            jnp.where(has & (old_g >= 0), -1, 0)
-        ),
+        grp_size=st.grp_size.at[jnp.maximum(old_g, 0)].add(d_g),
+        grp_live=st.grp_live.at[jnp.maximum(old_g, 0)].add(d_g),
+        mapped_pages=st.mapped_pages + jnp.where(has, -1, 0),
     )
     return st, jnp.where(has, old_g, 0)
 
@@ -442,11 +495,12 @@ def _invalidate_counts(ctx: SimContext, st: SimState, lba):
     has = pm >= 0
     pm_c = jnp.maximum(pm, 0)
     old_g = st.group_of[pm_c // b]
+    d_g = jnp.where(has & (old_g >= 0), -1, 0)
     st = st.replace(
         live=st.live.at[pm_c // b].add(jnp.where(has, -1, 0)),
-        grp_size=st.grp_size.at[jnp.maximum(old_g, 0)].add(
-            jnp.where(has & (old_g >= 0), -1, 0)
-        ),
+        grp_size=st.grp_size.at[jnp.maximum(old_g, 0)].add(d_g),
+        grp_live=st.grp_live.at[jnp.maximum(old_g, 0)].add(d_g),
+        mapped_pages=st.mapped_pages + jnp.where(has, -1, 0),
     )
     return st, jnp.where(has, old_g, 0), pm
 
@@ -558,9 +612,11 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
             return gs, t
 
         # full unroll: B is small and static; the scan-loop overhead on
-        # XLA:CPU would otherwise dominate the tiny [G]-sized body
+        # XLA:CPU would otherwise dominate the tiny [G]-sized body.
+        # The carry is the EFFECTIVE sizes (grp_live, what _hit_rates
+        # reads); identical drift to grp_size within a drain.
         _, ts = jax.lax.scan(
-            body, st.grp_size, (demote_flag, is_live), unroll=b
+            body, st.grp_live, (demote_flag, is_live), unroll=b
         )
         return ts
 
@@ -679,10 +735,10 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
     page_map = st.page_map.at[jnp.where(is_live, lbas_c, lba_pages)].set(
         jnp.where(ok, dst_blk * b + dst_slot, -1), mode="drop"
     )  # dead slots land out of bounds → untouched
-    grp_size = (
-        st.grp_size.at[g].add(-n_live)
-        + jnp.sum(onehot_t & ok[:, None], axis=0, dtype=jnp.int32)
-    )
+    landed = jnp.sum(onehot_t & ok[:, None], axis=0, dtype=jnp.int32)
+    grp_size = st.grp_size.at[g].add(-n_live) + landed
+    grp_live_a = st.grp_live.at[g].add(-n_live) + landed
+    n_lost = jnp.sum(is_live & jnp.logical_not(ok))  # dropped migrations
 
     # -- erase the victim ---------------------------------------------------
     grp_phys_f = grp_phys.at[g].add(-1)
@@ -698,11 +754,13 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
         grp_phys=grp_phys_f,
         grp_surplus=surplus_of(st.grp_active, grp_phys_f, st.grp_alloc),
         free_blocks=st.free_blocks - n_claimed + 1,
+        mapped_pages=st.mapped_pages - n_lost,
         active_blk=active_blk,
         page_map=page_map,
         grp_size=grp_size,
+        grp_live=grp_live_a,
         n_mig=st.n_mig + jnp.sum(ok),
-        n_dropped=st.n_dropped + jnp.sum(is_live & jnp.logical_not(ok)),
+        n_dropped=st.n_dropped + n_lost,
         n_erase=st.n_erase + 1,
     )
 
@@ -799,9 +857,11 @@ def _gc_drain_bulk_static(ctx: SimContext, st: SimState, victim, g):
         grp_phys=grp_phys,
         grp_surplus=surplus_of(st.grp_active, grp_phys, st.grp_alloc),
         free_blocks=st.free_blocks - jnp.where(claim_ok, 1, 0) + 1,
+        mapped_pages=st.mapped_pages - (n_live - n_ok),
         active_blk=active_blk,
         page_map=page_map,
         grp_size=st.grp_size.at[g].add(n_ok - n_live),
+        grp_live=st.grp_live.at[g].add(n_ok - n_live),
         n_mig=st.n_mig + n_ok,
         n_dropped=st.n_dropped + (n_live - n_ok),
         n_erase=st.n_erase + 1,
@@ -829,8 +889,11 @@ def _gc_drain_reference(ctx: SimContext, st: SimState, victim, g, demote_fn):
             live=st.live.at[victim].add(jnp.where(is_live, -1, 0)),
         )
         g_tgt = demote_fn(st, lba_c, g)  # pure read of st
+        d = jnp.where(is_live, -1, 0)
         st = st.replace(
-            grp_size=st.grp_size.at[g].add(jnp.where(is_live, -1, 0))
+            grp_size=st.grp_size.at[g].add(d),
+            grp_live=st.grp_live.at[g].add(d),
+            mapped_pages=st.mapped_pages + d,
         )
         return _write_page(
             ctx, st, lba_c, g_tgt, is_migration=True, enabled=is_live
@@ -899,7 +962,12 @@ def _recompute_alloc(ctx: SimContext, st: SimState, policy):
     geom, mcfg = ctx.geom, ctx.mcfg
     b = geom.pages_per_block
     active = st.grp_active
-    s = jnp.where(active, st.grp_size.astype(jnp.float32), 0.0)
+    # EFFECTIVE group sizes (carried grp_live == mapped pages per group;
+    # == grp_size by construction — a trimmed page belongs to no group):
+    # trimmed pages drop out of s, so op_total below grows by exactly the
+    # trimmed span — TRIM is dynamic over-provisioning the §5.5 budgets
+    # redistribute at the next interval (Frankie et al., arXiv:1208.1794).
+    s = jnp.where(active, st.grp_live.astype(jnp.float32), 0.0)
     s = jnp.maximum(s, jnp.where(active, 1.0, 0.0))
     use_assumed = policy["alloc_mode"] == ALLOC_FDP
     p = jnp.where(
@@ -961,7 +1029,10 @@ def _interval_update(ctx: SimContext, st: SimState, policy):
 # ---------------------------------------------------------------------------
 
 def _hit_rates(st: SimState):
-    s = jnp.maximum(st.grp_size.astype(jnp.float32), 1.0)
+    # per EFFECTIVE (mapped) page — under TRIM a group's temperature is
+    # measured over the pages it actually holds (grp_live, the carried
+    # utilization counter; == grp_size, see its declaration)
+    s = jnp.maximum(st.grp_live.astype(jnp.float32), 1.0)
     hr = st.grp_p / s
     return jnp.where(st.grp_active, hr, -1.0)
 
@@ -994,6 +1065,7 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
             # seed stats: half the hottest group's measured frequency
             grp_p=st.grp_p.at[slot].set(st.grp_p[hottest] * 0.5),
             grp_size=st.grp_size.at[slot].set(0),
+            grp_live=st.grp_live.at[slot].set(0),
             grp_phys=grp_phys,
             grp_surplus=surplus_of(grp_active, grp_phys, st.grp_alloc),
             grp_created=st.grp_created.at[slot].set(st.interval),
@@ -1002,8 +1074,8 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
 
     st = _cond_fields(
         create, do_create, st,
-        ("grp_active", "grp_p", "grp_size", "grp_phys", "grp_surplus",
-         "grp_created", "cooldown"),
+        ("grp_active", "grp_p", "grp_size", "grp_live", "grp_phys",
+         "grp_surplus", "grp_created", "cooldown"),
     )
 
     # merge: coldest adjacent pair that converged, or an undersized group
@@ -1036,7 +1108,8 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
             jnp.where(ab >= 0, CLOSED, st.state[jnp.maximum(ab, 0)])
         )
         merged = {}
-        for key in ("grp_size", "grp_phys", "grp_p", "grp_writes"):
+        for key in ("grp_size", "grp_live", "grp_phys", "grp_p",
+                    "grp_writes"):
             arr = getattr(st, key)
             merged[key] = arr.at[g_to].add(arr[g_from]).at[g_from].set(0)
         grp_active = st.grp_active.at[g_from].set(False)
@@ -1055,7 +1128,8 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
     return _cond_fields(
         do_merge, merge, st,
         ("group_of", "state", "active_blk", "grp_active", "grp_surplus",
-         "cooldown", "grp_size", "grp_phys", "grp_p", "grp_writes"),
+         "cooldown", "grp_size", "grp_live", "grp_phys", "grp_p",
+         "grp_writes"),
     )
 
 
@@ -1291,9 +1365,16 @@ def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
     # interval completion (§5.1); t+1 == n_app after this write, so the
     # predicate is exactly (n_app % h == 0). With a fleet-shared h it is
     # a SCALAR shared by every vmapped drive; per-drive interval sweeps
-    # (ctx.per_drive_interval) read the traced policy["h"] instead.
+    # (ctx.per_drive_interval) read the traced policy["h"] instead. In
+    # op-stream mode t is the EVENT index (trims interleave, so write
+    # counts diverge across drives) and the predicate reads the carried
+    # write clock — same value under a pure-write stream, where
+    # st.n_app == t + 1 at this point.
     h = policy["h"] if ctx.per_drive_interval else ctx.h
-    is_interval = ((t + 1) % h) == 0
+    if ctx.with_trim:
+        is_interval = (st.n_app % h) == 0
+    else:
+        is_interval = ((t + 1) % h) == 0
     st = _cond_fields(
         is_interval,
         lambda s: _interval_update(ctx, s, policy),
@@ -1303,19 +1384,49 @@ def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
     return st
 
 
-def make_step(ctx: SimContext, policy, rate_fn):
-    """Build the per-write scan step.
+def _trim_page(ctx: SimContext, st: SimState, lba):
+    """The op-stream TRIM step: unmap ``lba`` and kill its physical slot.
+
+    The fast-path peer of the ``kernels/write_path`` append — the counter
+    half rides :func:`_invalidate_counts` (O(1) carried updates: ``live``,
+    ``grp_size``/``grp_live``, ``mapped_pages``) and the mapping half is
+    one fused ``apply_trim`` op. A TRIM frees space, so it can never need
+    the GC / valve / movement machinery, and it completes no application
+    write, so it never closes a §5.1 interval: there is no heavy path.
+    A re-trim of an already-unmapped page is a counted no-op.
+    """
+    st, _old_g, old_pm = _invalidate_counts(ctx, st, lba)
+    page_map, valid = apply_trim(st.page_map, st.valid, lba, old_pm)
+    return st.replace(
+        page_map=page_map, valid=valid, n_trim=st.n_trim + 1
+    )
+
+
+def make_step(ctx: SimContext, policy, rate_fn, page_group0=None):
+    """Build the per-event scan step.
 
     policy: traced pytree from :func:`policy_from_config` (per-drive under
     vmap). rate_fn(st, lba, t) -> true per-page update rate of `lba` at
-    global write index t (oracle detector input; phase-aware in fleets).
-    Scan input = (lba, t); t is the global application-write index, which is
+    scan index t (oracle detector input; phase-aware in fleets).
+
+    Pure-write mode (``ctx.with_trim=False``, the default): scan input =
+    (lba, t); t is the global application-write index, which is
     deliberately NOT taken from batched state so the interval predicate
     stays a scalar under vmap whenever every drive shares h
     (ctx.per_drive_interval=False) — the expensive §5.1 bookkeeping then
     lowers to a real branch taken every h steps, not a per-step select.
 
-    With ``ctx.fast_path=True`` (default) the step is split: a write whose
+    Op-stream mode (``ctx.with_trim=True``): scan input = (op, lba, t)
+    with ``op ∈ {OP_WRITE, OP_TRIM}`` and t the EVENT index (it feeds only
+    the oracle's phase lookup). A WRITE event runs the same write body as
+    pure-write mode — only the §5.1 predicate reads the carried ``n_app``
+    instead of t, the identical value whenever every event is a write —
+    and a TRIM event runs :func:`_trim_page`. ``page_group0`` ([LBA]
+    int32, the workload's layout groups) resolves the residence group of
+    a write that RE-MAPS a trimmed page, which has no physical home to
+    inherit a group from.
+
+    With ``ctx.fast_path=True`` (default) the write is split: one whose
     target group has an open active block with room, with the pool above
     reserve, no redeemable movement surplus anywhere, and no interval
     boundary, takes the LEAN branch — invalidate counters, pick the group,
@@ -1327,26 +1438,36 @@ def make_step(ctx: SimContext, policy, rate_fn):
     """
     geom, mcfg = ctx.geom, ctx.mcfg
     b = geom.pages_per_block
+    if ctx.with_trim:
+        assert page_group0 is not None, "op-stream step needs page_group0"
+        page_group0 = jnp.asarray(page_group0, jnp.int32)
 
-    def reference_step(st, xs):
-        lba, t = xs
+    def resolve_group(st, old_g, had_mapping, lba):
+        # a write that re-maps a trimmed page inherits the workload's
+        # layout group (first active group if dynamic-mode merging has
+        # retired that slot); mapped pages keep their residence group
+        pg0 = page_group0[lba]
+        pg0 = jnp.where(
+            st.grp_active[pg0], pg0, jnp.argmax(st.grp_active)
+        ).astype(jnp.int32)
+        return jnp.where(had_mapping, old_g, pg0).astype(jnp.int32)
 
-        def lookup(s, l):
-            return rate_fn(s, l, t)
-
-        st, old_g = _invalidate(ctx, st, lba)
+    def reference_write(st, lba, t, lookup):
+        # the seed-shaped single-path write, shared by both stream modes
+        if ctx.with_trim:
+            had = st.page_map[lba] >= 0
+            st, old_g = _invalidate(ctx, st, lba)
+            old_g = resolve_group(st, old_g, had, lba)
+        else:
+            st, old_g = _invalidate(ctx, st, lba)
         st, g = _target_group_app(ctx, st, lba, old_g, policy, lookup)
         g = jnp.where(st.grp_active[g], g, old_g)
-        st = _step_tail(ctx, st, lba, t, g, policy, lookup)
-        return st, (st.n_app, st.n_mig)
+        return _step_tail(ctx, st, lba, t, g, policy, lookup)
 
-    def split_step(st, xs):
-        lba, t = xs
-
-        def lookup(s, l):
-            return rate_fn(s, l, t)
-
+    def split_write(st, lba, t, lookup):
         st, old_g, old_pm = _invalidate_counts(ctx, st, lba)
+        if ctx.with_trim:
+            old_g = resolve_group(st, old_g, old_pm >= 0, lba)
         st, g = _target_group_app(ctx, st, lba, old_g, policy, lookup)
         g = jnp.where(st.grp_active[g], g, old_g)
 
@@ -1359,7 +1480,8 @@ def make_step(ctx: SimContext, policy, rate_fn):
         #  * movement: a fast write changes no grp_phys/grp_alloc, so the
         #    post-write surplus the tail would read equals the carried
         #    pre-write surplus — if its max is < 1, movement cannot fire;
-        #  * the interval predicate is the tail's own.
+        #  * the interval predicate is the tail's own (op-stream mode
+        #    reads the carried write clock, not the event index).
         blk = st.active_blk[g]
         blk_c = jnp.maximum(blk, 0)
         has_room = (blk >= 0) & (st.fill[blk_c] < b)
@@ -1371,7 +1493,10 @@ def make_step(ctx: SimContext, policy, rate_fn):
         else:
             movement_may = False
         h = policy["h"] if ctx.per_drive_interval else ctx.h
-        is_interval = ((t + 1) % h) == 0
+        if ctx.with_trim:
+            is_interval = ((st.n_app + 1) % h) == 0
+        else:
+            is_interval = ((t + 1) % h) == 0
         heavy = (~has_room) | valve_may | movement_may | is_interval
 
         def heavy_path(st):
@@ -1390,6 +1515,8 @@ def make_step(ctx: SimContext, policy, rate_fn):
                 fill=st.fill.at[blk_c].add(1),
                 live=st.live.at[blk_c].add(1),
                 grp_size=st.grp_size.at[g].add(1),
+                grp_live=st.grp_live.at[g].add(1),
+                mapped_pages=st.mapped_pages + 1,
                 n_app=st.n_app + 1,
                 grp_writes=st.grp_writes.at[g].add(1),
             )
@@ -1400,30 +1527,72 @@ def make_step(ctx: SimContext, policy, rate_fn):
             lambda s: _fields_of(fast_path(s), _STEP_FIELDS),
             st,
         )
-        st = st.replace(**dict(zip(_STEP_FIELDS, out)))
+        return st.replace(**dict(zip(_STEP_FIELDS, out)))
+
+    def reference_step(st, xs):
+        lba, t = xs
+
+        def lookup(s, l):
+            return rate_fn(s, l, t)
+
+        st = reference_write(st, lba, t, lookup)
         return st, (st.n_app, st.n_mig)
 
+    def split_step(st, xs):
+        lba, t = xs
+
+        def lookup(s, l):
+            return rate_fn(s, l, t)
+
+        st = split_write(st, lba, t, lookup)
+        return st, (st.n_app, st.n_mig)
+
+    def op_step(st, xs):
+        op, lba, t = xs
+
+        def lookup(s, l):
+            return rate_fn(s, l, t)
+
+        write_fn = split_write if ctx.fast_path else reference_write
+        out = jax.lax.cond(
+            op == OP_TRIM,
+            lambda s: _fields_of(_trim_page(ctx, s, lba), _OP_FIELDS),
+            lambda s: _fields_of(write_fn(s, lba, t, lookup), _OP_FIELDS),
+            st,
+        )
+        st = st.replace(**dict(zip(_OP_FIELDS, out)))
+        return st, (st.n_app, st.n_mig)
+
+    if ctx.with_trim:
+        return op_step
     return split_step if ctx.fast_path else reference_step
 
 
-def scan_writes(ctx: SimContext, step, st: SimState, lbas, ts):
-    """Scan ``step`` over a write segment, honoring the chunking knobs.
+def scan_writes(ctx: SimContext, step, st: SimState, lbas, ts, ops=None):
+    """Scan ``step`` over an event segment, honoring the chunking knobs.
+
+    ``ops`` (required iff ``ctx.with_trim``): the per-event op codes; the
+    scan then folds (op, lba, t) triples instead of (lba, t) pairs.
 
     ``ctx.trace_every == 1``: one scan over T steps, dense cumulative
-    (n_app, n_mig) trace [T]. ``trace_every = E > 1``: the writes are
+    (n_app, n_mig) trace [T]. ``trace_every = E > 1``: the events are
     regrouped [T//E, E] (E must divide T) and the counters are emitted once
     per chunk — element j equals the dense trace at step (j+1)·E - 1. The
     inner chunk emits nothing, so XLA sees E fused write-steps between
-    trace stores. Chunking preserves write-order semantics trivially: the
-    same step function is folded over the same (lba, t) sequence, only the
+    trace stores. Chunking preserves event-order semantics trivially: the
+    same step function is folded over the same event sequence, only the
     loop nest and the trace sampling change. ``ctx.unroll`` unrolls the
     (inner) scan body to amortize XLA:CPU per-iteration overhead.
     """
+    assert (ops is not None) == ctx.with_trim, (
+        "ops stream and ctx.with_trim must agree"
+    )
     t_total = int(lbas.shape[0])
     e = ctx.trace_every
+    cols = (lbas, ts) if ops is None else (ops, lbas, ts)
     if e <= 1:
         return jax.lax.scan(
-            step, st, (lbas, ts), unroll=min(ctx.unroll, max(t_total, 1))
+            step, st, cols, unroll=min(ctx.unroll, max(t_total, 1))
         )
     assert t_total % e == 0, (
         f"trace_every={e} must divide the segment length {t_total}"
@@ -1437,7 +1606,7 @@ def scan_writes(ctx: SimContext, step, st: SimState, lbas, ts):
         s, _ = jax.lax.scan(inner, s, xs, unroll=min(ctx.unroll, e))
         return s, (s.n_app, s.n_mig)
 
-    xs = (lbas.reshape(t_total // e, e), ts.reshape(t_total // e, e))
+    xs = tuple(c.reshape(t_total // e, e) for c in cols)
     return jax.lax.scan(chunk, st, xs)
 
 
@@ -1451,21 +1620,47 @@ def _run_jit(ctx: SimContext, st: SimState, lbas, page_rate, policy):
     return scan_writes(ctx, step, st, lbas, ts)
 
 
-def run(ctx: SimContext, st: SimState, lbas, *, page_rate=None, assumed_p=None,
-        fdp_rate=None):
-    """Run the simulator over a segment of writes.
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _run_ops_jit(ctx: SimContext, st: SimState, ops, lbas, page_rate,
+                 page_group0, policy):
+    def rate_fn(s, lba, t):
+        return page_rate[lba]
+
+    step = make_step(ctx, policy, rate_fn, page_group0)
+    ts = jnp.arange(lbas.shape[0], dtype=jnp.int32)  # event index
+    return scan_writes(ctx, step, st, lbas, ts, ops)
+
+
+def run(ctx: SimContext, st: SimState, lbas, *, ops=None, page_group0=None,
+        page_rate=None, assumed_p=None, fdp_rate=None):
+    """Run the simulator over a segment of writes (or, with ``ops``, of
+    WRITE/TRIM events).
 
     lbas: int32 [T]; page_rate: float32 [LBA] true per-page update rates
-    (oracle detector modes). Returns (final_state, trace dict of CUMULATIVE
-    counters — [T] dense, or [T // ctx.trace_every] sampled at every
-    trace_every-th write) — segment the workload (e.g. at a frequency
-    swap) by calling run() repeatedly with updated oracle arrays.
+    (oracle detector modes). ops: int32 [T] op codes (requires
+    ``ctx.with_trim=True`` and ``page_group0`` — the [LBA] layout groups
+    re-mapped pages land in). Returns (final_state, trace dict of
+    CUMULATIVE counters — [T] dense, or [T // ctx.trace_every] sampled at
+    every trace_every-th event) — segment the workload (e.g. at a
+    frequency swap) by calling run() repeatedly with updated oracle
+    arrays.
     """
     lbas = jnp.asarray(lbas, jnp.int32)
     if page_rate is None:
         page_rate = jnp.zeros(ctx.geom.lba_pages, jnp.float32)
     policy = policy_from_config(ctx, assumed_p, fdp_rate)
-    st, (app, mig) = _run_jit(
-        ctx, st, lbas, jnp.asarray(page_rate, jnp.float32), policy
+    assert (ops is not None) == ctx.with_trim, (
+        "pass ops= iff the context is op-stream (ctx.with_trim)"
     )
+    if ops is None:
+        st, (app, mig) = _run_jit(
+            ctx, st, lbas, jnp.asarray(page_rate, jnp.float32), policy
+        )
+    else:
+        assert page_group0 is not None
+        st, (app, mig) = _run_ops_jit(
+            ctx, st, jnp.asarray(ops, jnp.int32), lbas,
+            jnp.asarray(page_rate, jnp.float32),
+            jnp.asarray(page_group0, jnp.int32), policy,
+        )
     return st, {"app": app, "mig": mig}

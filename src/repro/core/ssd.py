@@ -116,14 +116,14 @@ _SIM_STATE_FIELDS = (
     "slot_lba", "valid", "live", "fill", "stamp", "state", "group_of",
     # per-group
     "active_blk", "grp_size", "grp_phys", "grp_p", "grp_writes",
-    "grp_alloc", "grp_active", "grp_created", "grp_surplus",
+    "grp_alloc", "grp_active", "grp_created", "grp_surplus", "grp_live",
     # O(1) accounting (incrementally maintained; see check_invariants)
-    "free_blocks",
+    "free_blocks", "mapped_pages",
     # detector (bloom filter pair)
     "bloom_active", "bloom_passive", "bloom_writes",
     # counters
-    "n_app", "n_mig", "n_erase", "n_dropped", "clock", "interval",
-    "cooldown",
+    "n_app", "n_mig", "n_erase", "n_dropped", "n_trim", "clock",
+    "interval", "cooldown",
 )
 
 
@@ -161,12 +161,29 @@ class SimState:
     # carried block-surplus per group: grp_phys - grp_alloc where active,
     # -INT_MAX elsewhere — the movement-op argmax reads this directly
     grp_surplus: jax.Array  # [G] int32
+    # carried per-group mapped-page count: == Σ live over the group's
+    # blocks always, and — because group membership IS residence, so a
+    # trimmed page belongs to no group — equal to ``grp_size`` by
+    # construction (every mutation site applies the same delta to both).
+    # Carried separately so the effective-size consumers (§5.5 allocator,
+    # detector hit rates, fleet analytics) name the utilization counter
+    # the TRIM model is stated in (Frankie et al., arXiv:1208.1794:
+    # trimmed space is dynamic over-provisioning), and so
+    # ``check_invariants`` cross-checks both update chains against the
+    # ground truth independently.
+    grp_live: jax.Array  # [G] int32
     # incrementally-maintained pool size: == (state == FREE).sum() always.
     # Every per-write predicate (GC low-pool, emergency valve, movement-op
     # headroom) is an O(1) read of this scalar; the only surviving full
     # reductions over block state are per-GC (victim search) or diagnostic
     # (check_invariants).
     free_blocks: jax.Array  # [] int32
+    # incrementally-maintained drive utilization: == (page_map >= 0).sum()
+    # always. TRIM decrements it, a write of an unmapped page increments
+    # it; the effective-OP analytics (core/analytics.effective_op_ratio,
+    # FleetResult.predicted_wa) read this scalar instead of reducing over
+    # the logical span.
+    mapped_pages: jax.Array  # [] int32
     bloom_active: jax.Array   # [G, bits] bool (§5.6); [G, 1] when unused
     bloom_passive: jax.Array  # [G, bits] bool
     bloom_writes: jax.Array   # [G] int32
@@ -174,6 +191,7 @@ class SimState:
     n_mig: jax.Array      # [] int32 GC migrations
     n_erase: jax.Array    # [] int32 block erases
     n_dropped: jax.Array  # [] int32 dropped writes (pool exhausted; tested 0)
+    n_trim: jax.Array     # [] int32 TRIM ops processed (incl. no-op re-trims)
     clock: jax.Array      # [] int32 block-claim clock (LRU)
     interval: jax.Array   # [] int32 completed §5.1 intervals
     cooldown: jax.Array   # [] int32 intervals until create/merge allowed
@@ -235,6 +253,12 @@ class SimState:
                     owned * self.live[None, :], axis=1
                 ) == self.grp_size
             ),
+            "grp_live": jnp.all(
+                jnp.sum(
+                    owned * self.live[None, :], axis=1
+                ) == self.grp_live
+            ),
+            "mapped_pages": self.mapped_pages == jnp.sum(mapped),
             "page_map_injective": jnp.all(hits[: k * b] <= 1),
             "page_map_valid": jnp.all(slot_valid),
             "page_map_backptr": jnp.all(back),
@@ -341,7 +365,9 @@ def init_state(
                 grp_active, grp_phys - np.maximum(grp_phys, 1), -INT32_MAX
             ).astype(np.int32)
         ),
+        grp_live=jnp.asarray(grp_size),  # fully mapped: live == size
         free_blocks=jnp.asarray(int((state_arr == FREE).sum()), jnp.int32),
+        mapped_pages=jnp.asarray(lba, jnp.int32),
         # (G, 1) placeholder when the context excludes the bloom branch
         # (SimContext.use_bloom=False)
         bloom_active=jnp.zeros(
@@ -355,6 +381,7 @@ def init_state(
         n_mig=jnp.zeros((), jnp.int32),
         n_erase=jnp.zeros((), jnp.int32),
         n_dropped=jnp.zeros((), jnp.int32),
+        n_trim=jnp.zeros((), jnp.int32),
         clock=jnp.asarray(blk, jnp.int32),
         interval=jnp.zeros((), jnp.int32),
         cooldown=jnp.zeros((), jnp.int32),

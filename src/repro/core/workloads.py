@@ -1,9 +1,17 @@
-"""Workload generators for the simulator (paper §6 experiments).
+"""Workload generators for the simulator (paper §6 experiments + op streams).
 
-A workload phase = (group sizes in pages, per-group update probabilities).
-Writes are sampled i.i.d.: group ~ Categorical(p), page ~ Uniform(group).
+A workload phase = (group sizes in pages, per-group update probabilities,
+optional per-group TRIM probabilities). Events are sampled i.i.d.: group ~
+Categorical(p), page ~ Uniform(group), and — when the phase carries trim
+probabilities — op ~ Bernoulli(trim_probs[group]) over {WRITE, TRIM}.
 Frequency swaps are expressed as a sequence of phases; the simulator is run
 segment-by-segment (oracle arrays differ per phase).
+
+TRIM streams model deletes (Frankie et al., arXiv:1208.1794/1210.5975):
+a trimmed page is unmapped until its next write, so a per-event trim
+probability t holds an expected fraction t of the group's pages trimmed at
+steady state — trimmed space acts as dynamic over-provisioning
+(core/analytics.effective_op_ratio).
 """
 
 from __future__ import annotations
@@ -12,12 +20,23 @@ import dataclasses
 
 import numpy as np
 
+# op codes of an op-stream event (op, lba); the simulator dispatches on
+# these at scan time (core/simulator, SimContext.with_trim)
+OP_WRITE, OP_TRIM = 0, 1
+
 
 @dataclasses.dataclass(frozen=True)
 class Phase:
     sizes: tuple[int, ...]  # pages per group (sums to LBA)
     probs: tuple[float, ...]  # update probability per group (sums to 1)
-    n_writes: int
+    n_writes: int  # events in this phase (writes + trims for op phases)
+    # probability that an event hitting group g is a TRIM instead of a
+    # WRITE; () = pure-write phase (the default everywhere pre-TRIM)
+    trim_probs: tuple[float, ...] = ()
+
+    @property
+    def has_trim(self) -> bool:
+        return any(t > 0.0 for t in self.trim_probs)
 
     def page_group(self) -> np.ndarray:
         return np.repeat(
@@ -30,6 +49,28 @@ class Phase:
         return np.repeat(rates.astype(np.float32), self.sizes)
 
     def sample(self, rng: np.random.Generator) -> np.ndarray:
+        """Draw the phase's [n_writes] page stream (pure-write phases)."""
+        assert not self.has_trim, "op phase: use sample_ops()"
+        _, lbas = self._sample_events(rng)
+        return lbas
+
+    def sample_ops(self, rng: np.random.Generator):
+        """Draw the phase's op stream: (ops [n], lbas [n]) int32 arrays.
+
+        For a pure-write phase this consumes exactly the draws
+        :meth:`sample` would (same lbas, ops all WRITE), so routing a
+        write-only workload through the op engine replays the identical
+        stream — the bit-compatibility anchor of tests/test_write_engine.
+        """
+        groups, lbas = self._sample_events(rng)
+        if not self.has_trim:
+            return np.zeros(self.n_writes, np.int32), lbas
+        tp = np.zeros(len(self.sizes))
+        tp[: len(self.trim_probs)] = self.trim_probs
+        ops = (rng.random(self.n_writes) < tp[groups]).astype(np.int32)
+        return ops, lbas
+
+    def _sample_events(self, rng: np.random.Generator):
         groups = rng.choice(
             len(self.probs), size=self.n_writes, p=np.asarray(self.probs)
         )
@@ -37,7 +78,7 @@ class Phase:
         within = (rng.random(self.n_writes) * np.asarray(self.sizes)[groups]).astype(
             np.int64
         )
-        return (offsets[groups] + within).astype(np.int32)
+        return groups, (offsets[groups] + within).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +99,7 @@ def phase_param_arrays(phases, *, g_max: int | None = None, p_max: int | None = 
     probs = np.zeros((p_n, g_n), np.float32)
     sizes = np.zeros((p_n, g_n), np.int32)
     offsets = np.zeros((p_n, g_n), np.int32)
+    trim_probs = np.zeros((p_n, g_n), np.float32)
     counts = np.zeros(p_n, np.int32)
     n_groups = np.ones(p_n, np.int32)
     for i, ph in enumerate(phases):
@@ -65,21 +107,30 @@ def phase_param_arrays(phases, *, g_max: int | None = None, p_max: int | None = 
         probs[i, :k] = ph.probs
         sizes[i, :k] = ph.sizes
         offsets[i, :k] = np.concatenate([[0], np.cumsum(ph.sizes)])[:-1]
+        trim_probs[i, : len(ph.trim_probs)] = ph.trim_probs
         counts[i] = ph.n_writes
         n_groups[i] = k
     return {
         "probs": probs, "sizes": sizes, "offsets": offsets,
-        "counts": counts, "n_groups": n_groups,
+        "trim_probs": trim_probs, "counts": counts, "n_groups": n_groups,
     }
 
 
-def sample_phases_device(key, params: dict, n_total: int):
-    """Draw the [n_total] write stream of a phase sequence on device.
+def sample_phases_device(key, params: dict, n_total: int,
+                         with_ops: bool = False):
+    """Draw the [n_total] event stream of a phase sequence on device.
 
     Mirrors :meth:`Phase.sample` (group ~ Categorical(p), page ~ Uniform
     within group) with jax.random instead of a NumPy Generator — same
     distribution, different stream. Jit-safe: ``n_total`` is static, phase
     boundaries come from ``params["counts"]``.
+
+    with_ops (static): also draw op ~ Bernoulli(trim_probs[phase, group])
+    from a third key and return (ops, lbas) instead of lbas. The default
+    False path is draw-for-draw the pre-op-stream sampler, so pure-write
+    fleets keep their exact historical streams (bench cells stay
+    bit-comparable); op-mode streams split the key three ways and are a
+    DIFFERENT stream even at trim_probs == 0, like numpy-vs-jax sampling.
     """
     import jax
     import jax.numpy as jnp
@@ -93,7 +144,10 @@ def sample_phases_device(key, params: dict, n_total: int):
     t = jnp.arange(n_total, dtype=jnp.int32)
     ph = jnp.searchsorted(jnp.cumsum(counts), t, side="right")
     ph = jnp.minimum(ph, counts.shape[0] - 1)
-    k_grp, k_page = jax.random.split(key)
+    if with_ops:
+        k_grp, k_page, k_op = jax.random.split(key, 3)
+    else:
+        k_grp, k_page = jax.random.split(key)
     u_grp = jax.random.uniform(k_grp, (n_total,))
     u_page = jax.random.uniform(k_page, (n_total,))
     cdf = jnp.cumsum(probs, axis=1)  # [P, G]
@@ -103,7 +157,13 @@ def sample_phases_device(key, params: dict, n_total: int):
     within = jnp.minimum(
         (u_page * size.astype(jnp.float32)).astype(jnp.int32), size - 1
     )
-    return (offsets[ph, g] + within).astype(jnp.int32)
+    lbas = (offsets[ph, g] + within).astype(jnp.int32)
+    if not with_ops:
+        return lbas
+    trim_probs = jnp.asarray(params["trim_probs"], jnp.float32)
+    u_op = jax.random.uniform(k_op, (n_total,))
+    ops = (u_op < trim_probs[ph, g]).astype(jnp.int32)
+    return ops, lbas
 
 
 def split_sizes(lba: int, fracs) -> tuple[int, ...]:
@@ -160,3 +220,48 @@ def tpcc_like(lba: int, n_writes: int) -> Phase:
     agg = np.array([0.54 * 0.02, 0.26 * 1.0, 0.20 * 8.0])
     probs = tuple(agg / agg.sum())
     return Phase(sizes, probs, n_writes)
+
+
+# ---------------------------------------------------------------------------
+# op-stream (TRIM) workloads
+# ---------------------------------------------------------------------------
+
+def trimmed(phase: Phase, trim_frac) -> Phase:
+    """Interleave TRIMs into any phase: each event that hits group g is a
+    TRIM with probability ``trim_frac`` (scalar) or ``trim_frac[g]``.
+
+    With uniform page selection inside the group, a per-event trim
+    probability t holds an expected fraction t of the group's pages
+    trimmed at steady state (a page's mapped bit is a two-state chain
+    flipped by its own WRITE/TRIM events) — the knob the utilization
+    sweep turns.
+    """
+    if np.ndim(trim_frac) == 0:
+        tp = (float(trim_frac),) * len(phase.sizes)
+    else:
+        assert len(trim_frac) == len(phase.sizes)
+        tp = tuple(float(t) for t in trim_frac)
+    assert all(0.0 <= t <= 1.0 for t in tp), tp
+    return dataclasses.replace(phase, trim_probs=tp)
+
+
+def utilization_sweep(lba: int, n_ops: int, trim_fracs=(0.0, 0.1, 0.25, 0.5)):
+    """Single-group uniform phases holding trim fraction t of the LBA
+    trimmed at steady state, one per entry of ``trim_fracs`` — the
+    Frankie-style effective-OP sweep (each phase is an independent drive
+    of a fleet, not a segment sequence)."""
+    return [trimmed(uniform(lba, n_ops), t) for t in trim_fracs]
+
+
+def tpcc_churn(lba: int, n_ops: int) -> Phase:
+    """TPC-C table-churn op stream: the tpcc_like temperature shape with
+    the insert/update/delete lifecycle layered on.
+
+    Group 0 (history/item, the cold majority) is append-mostly — writes
+    only. Group 1 (stock/customer) updates in place with light pruning.
+    Group 2 (orders/new-order) is the churn cluster: rows are inserted,
+    updated while open, and deleted on delivery — a third of its events
+    are TRIMs, so ~33% of the hot table floats unmapped at steady state
+    and its share of the pool becomes dynamic over-provisioning.
+    """
+    return trimmed(tpcc_like(lba, n_ops), (0.0, 0.05, 1.0 / 3.0))

@@ -12,6 +12,10 @@ The pools arrive FLATTENED ([LBA] and [K·B]) and reshaped to (N, 1) tiles
 so the single-element stores are plain 2-D dynamic slices. ``ok`` masks the
 whole op (a disabled call must leave every pool untouched) and
 ``old_pm < 0`` masks just the invalidate.
+
+``apply_trim`` is the discard peer: the same scalar-prefetch shape with the
+append dropped — clear the old slot's valid bit, store -1 into the packed
+map. It backs the op-stream engine's TRIM fast path on TPU.
 """
 
 from __future__ import annotations
@@ -80,3 +84,48 @@ def apply_write(
         lba_new[:, 0].reshape(kk, b),
         val_new[:, 0].astype(valid.dtype).reshape(kk, b),
     )
+
+
+def _apply_trim_kernel(ops_ref, pm_ref, val_ref, pm_out, val_out):
+    lba = ops_ref[0, 0]
+    old = ops_ref[0, 1]
+    ok = ops_ref[0, 2] != 0
+
+    @pl.when(ok & (old >= 0))
+    def _clear():
+        val_out[pl.ds(old, 1), :] = jnp.zeros((1, 1), jnp.int32)
+
+    @pl.when(ok)
+    def _unmap():
+        pm_out[pl.ds(lba, 1), :] = jnp.full((1, 1), -1, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_trim(
+    page_map: jax.Array,  # [LBA] int32
+    valid: jax.Array,     # [K, B] bool
+    lba: jax.Array,       # [] int32
+    old_pm: jax.Array,    # [] int32, -1 = page had no mapping (no-op trim)
+    *,
+    enabled: jax.Array | bool = True,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    kk, b = valid.shape
+    ops = jnp.stack(
+        [lba, old_pm, jnp.asarray(enabled, jnp.int32)]
+    ).astype(jnp.int32)[None, :]
+    out = pl.pallas_call(
+        _apply_trim_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((page_map.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((kk * b, 1), jnp.int32),
+        ),
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(
+        ops,
+        page_map[:, None],
+        valid.reshape(-1, 1).astype(jnp.int32),
+    )
+    pm_new, val_new = out
+    return pm_new[:, 0], val_new[:, 0].astype(valid.dtype).reshape(kk, b)

@@ -1,11 +1,17 @@
-"""Public op: apply_write (Pallas on TPU, flat scalar lowering off-TPU)."""
+"""Public ops: apply_write / apply_trim (Pallas on TPU, flat lowering off-TPU)."""
 
 from __future__ import annotations
 
 import jax
 
+from .kernel import apply_trim as _apply_trim_kernel
 from .kernel import apply_write as _apply_write_kernel
-from .ref import apply_write_flat, apply_write_ref
+from .ref import (
+    apply_trim_flat,
+    apply_trim_ref,
+    apply_write_flat,
+    apply_write_ref,
+)
 
 
 def apply_write(page_map, slot_lba, valid, lba, old_pm, dst_blk, dst_slot):
@@ -31,4 +37,20 @@ def apply_write(page_map, slot_lba, valid, lba, old_pm, dst_blk, dst_slot):
     )
 
 
-__all__ = ["apply_write", "apply_write_ref", "apply_write_flat"]
+def apply_trim(page_map, valid, lba, old_pm):
+    """Fused fast-path TRIM: kill ``lba``'s old physical slot and unmap it
+    — the discard peer of :func:`apply_write` (same dispatch rule, same
+    equivalence suite). ``old_pm < 0`` (a re-trim of an already-unmapped
+    page) leaves the valid pool untouched; the map entry is stored -1
+    unconditionally (it already held -1).
+    """
+    if jax.default_backend() == "tpu":
+        return _apply_trim_kernel(page_map, valid, lba, old_pm,
+                                  interpret=False)
+    return apply_trim_flat(page_map, valid, lba, old_pm)
+
+
+__all__ = [
+    "apply_write", "apply_write_ref", "apply_write_flat",
+    "apply_trim", "apply_trim_ref", "apply_trim_flat",
+]

@@ -8,6 +8,10 @@ logical→physical ``page_map`` entry. ``apply_write_ref`` is the obvious
 uses off-TPU — every update is a single-element dynamic-update-slice on the
 FLATTENED pools, which XLA lowers natively (no scatter expansion, no
 capacity-sized masks) and which stays cheap under vmap.
+
+The TRIM peer (``apply_trim_ref`` / ``apply_trim_flat``) is the same op
+minus the append: kill the old slot's valid bit and unmap the page — the
+fast path of the op-stream engine's discard handling.
 """
 
 from __future__ import annotations
@@ -41,6 +45,44 @@ def apply_write_ref(
     valid = valid.at[dst_blk, dst_slot].set(True)
     page_map = page_map.at[lba].set(new_pm)
     return page_map, slot_lba, valid
+
+
+def apply_trim_ref(
+    page_map: jax.Array,  # [LBA] int32 packed physical address, -1 unmapped
+    valid: jax.Array,     # [K, B] bool per-slot liveness
+    lba: jax.Array,       # [] int32 page being trimmed
+    old_pm: jax.Array,    # [] int32 page's old packed address (-1 = none)
+) -> tuple[jax.Array, jax.Array]:
+    """The TRIM peer of :func:`apply_write_ref`: unmap ``lba`` and kill its
+    physical slot. A trim of an already-unmapped page (``old_pm < 0`` —
+    re-trims are legal in real discard streams) is a pure no-op.
+    ``slot_lba`` keeps its stale content, exactly as an overwrite's
+    invalidate does — dead slots are identified by ``valid`` alone.
+    Returns (page_map, valid)."""
+    b = valid.shape[1]
+    has_old = old_pm >= 0
+    old_c = jnp.maximum(old_pm, 0)
+    ob, os = old_c // b, old_c % b
+    valid = valid.at[ob, os].set(jnp.where(has_old, False, valid[ob, os]))
+    # unconditional: an unmapped page's entry is already -1
+    page_map = page_map.at[lba].set(-1)
+    return page_map, valid
+
+
+def apply_trim_flat(
+    page_map: jax.Array,
+    valid: jax.Array,
+    lba: jax.Array,
+    old_pm: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Flattened-index lowering of :func:`apply_trim_ref` (CPU/GPU path):
+    one dropped-out-of-bounds single-element store per pool, mirroring
+    :func:`apply_write_flat`."""
+    kk, b = valid.shape
+    old_c = jnp.where(old_pm >= 0, old_pm, kk * b)
+    vflat = valid.reshape(-1).at[old_c].set(False, mode="drop")
+    page_map = page_map.at[lba].set(-1)
+    return page_map, vflat.reshape(kk, b)
 
 
 def apply_write_flat(

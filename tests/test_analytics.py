@@ -112,3 +112,49 @@ class TestLambertW:
         e = float(np.e)
         assert float(A.lambertw0(jnp.asarray(e))) == pytest.approx(1.0, abs=1e-5)
         assert float(A.lambertw0(jnp.asarray(-1.0 / e))) == pytest.approx(-1.0, abs=2e-2)
+
+
+@pytest.mark.trim
+class TestEffectiveOp:
+    """Frankie et al.: trimmed logical space is dynamic over-provisioning."""
+
+    def test_no_trim_is_identity(self):
+        r = jnp.linspace(0.3, 0.95, 20)
+        np.testing.assert_allclose(
+            np.asarray(A.effective_op_ratio(r, 0.0)), np.asarray(r)
+        )
+
+    def test_effective_ratio_is_r_times_one_minus_t(self):
+        # r_eff = (1-t)·LBA / PBA: the OP pool gains exactly t·LBA pages
+        lba, pba, t = 700.0, 1000.0, 0.25
+        r_eff = float(A.effective_op_ratio(lba / pba, t))
+        assert r_eff == pytest.approx((1 - t) * lba / pba, rel=1e-6)
+        op_eff = pba - r_eff * pba
+        assert op_eff == pytest.approx((pba - lba) + t * lba, rel=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.floats(min_value=0.4, max_value=0.95),
+        st.floats(min_value=0.0, max_value=0.8),
+        st.floats(min_value=0.0, max_value=0.8),
+    )
+    def test_wa_monotone_decreasing_in_trim(self, r, t1, t2):
+        lo, hi = sorted((t1, t2))
+        wa_lo = float(A.wa_with_trim(r, hi))  # more trim → lower WA
+        wa_hi = float(A.wa_with_trim(r, lo))
+        assert wa_lo <= wa_hi + 1e-6
+        assert wa_lo >= 1.0
+
+    def test_composition_matches_manual(self):
+        r, t = 0.8, 0.3
+        manual = float(A.wa_from_op_ratio(jnp.asarray(r * (1 - t))))
+        assert float(A.wa_with_trim(r, t)) == pytest.approx(manual, rel=1e-6)
+
+    def test_grid_broadcasts(self):
+        r = jnp.linspace(0.5, 0.9, 5)[:, None]
+        t = jnp.asarray([0.0, 0.1, 0.25, 0.5])[None, :]
+        wa = A.wa_with_trim(r, t)
+        assert wa.shape == (5, 4)
+        # decreasing along the trim axis, increasing along utilization
+        assert bool(jnp.all(jnp.diff(wa, axis=1) <= 1e-6))
+        assert bool(jnp.all(jnp.diff(wa, axis=0) >= -1e-6))

@@ -105,6 +105,63 @@ class TestBulkGcEquivalence:
         )
 
 
+@pytest.mark.trim
+class TestBulkGcTrimEquivalence:
+    """Random interleaved TRIMs: the bulk drain must stay elementwise-
+    identical to the reference oracle AND the carried counters
+    (mapped_pages / grp_live, SimState.check_invariants) must hold under
+    BOTH gc_impl paths — GC migrates pages around holes the trims punch."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.sampled_from(["wolf", "wolf_lru", "fdp", "wolf_dynamic", "single"]),
+        st.sampled_from(["two_modal", "tpcc"]),
+        st.integers(min_value=0, max_value=10_000),
+        st.sampled_from([0.1, 0.3, 0.5]),
+    )
+    def test_bulk_matches_reference_with_trims(
+        self, manager, workload, seed, trim_frac
+    ):
+        from repro.core.ssd import assert_invariants
+
+        mcfg = _MANAGERS[manager]()
+        phases = [
+            W.trimmed(ph, trim_frac)
+            for ph in _phases(workload, np.random.default_rng(seed))
+        ]
+        bulk = M.simulate(GEOM, mcfg, phases, seed=seed, gc_impl="bulk")
+        ref = M.simulate(GEOM, mcfg, phases, seed=seed, gc_impl="reference")
+        label = f"{manager}/{workload}#{seed}/t={trim_frac}"
+        _assert_identical(bulk, ref, label)
+        assert_invariants(bulk.state, label)
+        assert int(bulk.state["n_trim"]) > 0
+
+    def test_bulk_matches_reference_with_trims_under_vmap(self):
+        """A mixed op-stream fleet (trim + pure-write drives across
+        partitions) under both drain implementations."""
+        lba, n = GEOM.lba_pages, N_WRITES
+        specs = [
+            DriveSpec(M.wolf(), (W.trimmed(W.two_modal(lba, n), 0.25),),
+                      seed=1),
+            DriveSpec(M.wolf(), (W.two_modal(lba, n),), seed=2),
+            DriveSpec(M.fdp(), (W.trimmed(W.two_modal(lba, n), 0.4),),
+                      seed=3),
+            DriveSpec(M.wolf_dynamic(), (W.tpcc_churn(lba, n),), seed=4),
+            DriveSpec(M.single_group(), (W.tpcc_churn(lba, n),), seed=5),
+        ]
+        bulk = simulate_fleet(GEOM, specs, sampler="numpy", gc_impl="bulk")
+        ref = simulate_fleet(GEOM, specs, sampler="numpy",
+                             gc_impl="reference")
+        np.testing.assert_array_equal(bulk.app, ref.app)
+        np.testing.assert_array_equal(bulk.mig, ref.mig)
+        for i, s in enumerate(specs):
+            for key, arr in bulk.state(i).items():
+                np.testing.assert_array_equal(
+                    np.asarray(arr), np.asarray(ref.state(i)[key]),
+                    err_msg=f"{s.label}: state[{key}]",
+                )
+
+
 class TestBulkGcStructure:
     def test_no_fori_loop_over_victim_slots(self):
         """Acceptance bar: the default GC path contains no fori_loop; only

@@ -303,3 +303,73 @@ class TestWritePath:
         np.testing.assert_array_equal(np.asarray(pm), np.asarray(page_map))
         np.testing.assert_array_equal(np.asarray(sl), np.asarray(slot_lba))
         np.testing.assert_array_equal(np.asarray(va), np.asarray(valid))
+
+
+class TestTrimPath:
+    """Fused fast-path TRIM (invalidate + unmap) — the discard peer of
+    apply_write: flat lowering and interpret-mode kernel vs the 2-D ref."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=1000))
+    def test_kernel_matches_ref(self, seed):
+        from repro.kernels.write_path.kernel import apply_trim
+        from repro.kernels.write_path.ref import (
+            apply_trim_flat,
+            apply_trim_ref,
+        )
+
+        rng = np.random.default_rng(seed)
+        k, b, lba_pages = 24, 8, 128
+        valid = rng.random((k, b)) < 0.5
+        page_map = rng.integers(-1, k * b, lba_pages).astype(np.int32)
+        lba = int(rng.integers(0, lba_pages))
+        if rng.random() < 0.3:
+            page_map[lba] = -1  # re-trim of an unmapped page
+        old_pm = int(page_map[lba])
+        args = (
+            jnp.asarray(page_map), jnp.asarray(valid),
+            jnp.asarray(lba), jnp.asarray(old_pm),
+        )
+        ref_pm, ref_v = apply_trim_ref(*args)
+        flat_pm, flat_v = apply_trim_flat(*args)
+        ker_pm, ker_v = apply_trim(*args, interpret=True)
+        for got, ref, name in (
+            (flat_pm, ref_pm, "flat page_map"), (flat_v, ref_v, "flat valid"),
+            (ker_pm, ref_pm, "kernel page_map"), (ker_v, ref_v, "kernel valid"),
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(ref), err_msg=name
+            )
+        assert flat_v.dtype == valid.dtype and ker_v.dtype == valid.dtype
+        # the page is unmapped and its old slot is dead
+        assert int(flat_pm[lba]) == -1
+        if old_pm >= 0:
+            assert not bool(flat_v[old_pm // b, old_pm % b])
+
+    def test_retrim_is_noop_on_valid(self):
+        from repro.kernels.write_path.ref import (
+            apply_trim_flat,
+            apply_trim_ref,
+        )
+
+        k, b, lba_pages = 8, 4, 24
+        page_map = jnp.full(lba_pages, -1, jnp.int32)
+        valid = jnp.ones((k, b), bool)
+        for fn in (apply_trim_ref, apply_trim_flat):
+            pm, va = fn(page_map, valid, jnp.asarray(5), jnp.asarray(-1))
+            assert int(pm[5]) == -1
+            np.testing.assert_array_equal(np.asarray(va), np.ones((k, b), bool))
+
+    def test_disabled_kernel_trim_is_noop(self):
+        from repro.kernels.write_path.kernel import apply_trim
+
+        rng = np.random.default_rng(0)
+        k, b, lba_pages = 8, 4, 24
+        page_map = jnp.asarray(rng.integers(0, k * b, lba_pages), jnp.int32)
+        valid = jnp.asarray(rng.random((k, b)) < 0.5)
+        pm, va = apply_trim(
+            page_map, valid, jnp.asarray(3), jnp.asarray(5),
+            enabled=jnp.asarray(False), interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(pm), np.asarray(page_map))
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(valid))

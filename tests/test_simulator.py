@@ -24,22 +24,30 @@ def _expected_wa(geom):
 
 
 def _check_invariants(geom, state):
+    """Trim-aware conservation checks: a pure-write drive holds every
+    logical page mapped; an op-stream drive holds exactly ``mapped_pages``
+    of them (the carried counter, cross-checked here from scratch)."""
     live = np.asarray(state["live"])
     valid = np.asarray(state["valid"])
     fill = np.asarray(state["fill"])
+    pm = np.asarray(state["page_map"])
+    mapped = pm >= 0
+    n_mapped = int(mapped.sum())
     assert int(state["n_dropped"]) == 0, "writes were dropped (pool exhausted)"
-    assert live.sum() == geom.lba_pages, "live-page conservation"
-    assert valid.sum() == geom.lba_pages, "valid-bitmap conservation"
+    assert int(state["mapped_pages"]) == n_mapped, "carried mapped_pages"
+    if int(state["n_trim"]) == 0:
+        assert n_mapped == geom.lba_pages, "pure-write drive fully mapped"
+    assert live.sum() == n_mapped, "live-page conservation"
+    assert valid.sum() == n_mapped, "valid-bitmap conservation"
     np.testing.assert_array_equal(valid.sum(1), live, err_msg="live==Σvalid")
     assert (fill >= live).all(), "fill ≥ live"
     # the packed mapping is a bijection onto valid slots
-    pm = np.asarray(state["page_map"])
-    assert (pm >= 0).all()
-    mb, ms = pm // geom.pages_per_block, pm % geom.pages_per_block
+    mb = pm[mapped] // geom.pages_per_block
+    ms = pm[mapped] % geom.pages_per_block
     assert valid[mb, ms].all(), "every mapped slot is valid"
     sl = np.asarray(state["slot_lba"])
     back = sl[mb, ms]
-    np.testing.assert_array_equal(back, np.arange(geom.lba_pages))
+    np.testing.assert_array_equal(back, np.arange(geom.lba_pages)[mapped])
 
 
 class TestEquilibrium:
@@ -177,4 +185,41 @@ class TestInvariantsProperty:
         phase = W.two_modal(geom.lba_pages, 25_000, p_hot=p_hot, frac_hot=frac)
         res = M.simulate(geom, mcfg, [phase], seed=seed)
         _check_invariants(geom, res.state)
+        assert res.wa_total >= 1.0
+
+    @pytest.mark.trim
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.sampled_from([(4, 32, 8), (8, 32, 16)]),
+        st.floats(min_value=0.6, max_value=0.85),
+        st.integers(min_value=0, max_value=100),
+        st.sampled_from(["wolf", "fdp", "single", "wolf_lru"]),
+        st.sampled_from(["bulk", "reference"]),
+    )
+    def test_state_invariants_random_with_trims(
+        self, geo, r, seed, manager, gc_impl
+    ):
+        """Random interleaved TRIMs (op-stream engine) under BOTH gc_impl
+        paths: the full-reduction checker AND the carried
+        mapped_pages/grp_live counters (ssd.assert_invariants) must hold."""
+        from repro.core.ssd import assert_invariants
+
+        luns, bpl, ppb = geo
+        geom = Geometry(
+            n_luns=luns, blocks_per_lun=bpl, pages_per_block=ppb, lba_pba=r
+        )
+        mcfg = getattr(M, manager)() if manager != "single" else M.single_group()
+        rng = np.random.default_rng(seed)
+        frac = float(rng.uniform(0.2, 0.8))
+        p_hot = float(rng.uniform(0.6, 0.95))
+        trim = float(rng.uniform(0.05, 0.5))
+        phase = W.trimmed(
+            W.two_modal(geom.lba_pages, 20_000, p_hot=p_hot, frac_hot=frac),
+            trim,
+        )
+        res = M.simulate(geom, mcfg, [phase], seed=seed, gc_impl=gc_impl)
+        label = f"{manager}/{gc_impl}/t={trim:.2f}"
+        _check_invariants(geom, res.state)
+        assert_invariants(res.state, label)
+        assert int(res.state["n_trim"]) > 0, label
         assert res.wa_total >= 1.0

@@ -1,0 +1,166 @@
+"""TRIM subsystem acceptance suite (the tentpole's §6-style experiment).
+
+Frankie et al. (arXiv:1208.1794): TRIMmed logical space is dynamic
+over-provisioning — holding a fraction t of the LBA trimmed at steady
+state moves the drive's operating point to the effective OP ratio
+``r·(1-t)``, so equilibrium WA must track
+``wa_from_op_ratio(effective_op_ratio(r, t))`` and fall monotonically in
+t for every policy. Both are asserted here over one vmapped op-stream
+fleet per test (the utilization × trim-rate sweep the ISSUE names),
+plus engine-level sanity: steady-state mapped fraction ≈ 1 - t and the
+carried ``mapped_pages``/``grp_live`` counters never drift.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import analytics as A
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.fleet import DriveSpec, simulate_fleet
+from repro.core.ssd import Geometry, assert_invariants
+
+pytestmark = pytest.mark.trim
+
+GEOM = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8, lba_pba=0.75)
+TRIM_FRACS = (0.0, 0.1, 0.25, 0.5)
+
+
+def _equilibrium_wa(fleet, i, window):
+    return float(np.mean(fleet.result(i).wa_curve(window)[-3:]))
+
+
+class TestEffectiveOpSweep:
+    """Acceptance bar: the LRU single-group utilization sweep lands within
+    15% of the closed-form effective-OP model at every trim fraction."""
+
+    def test_lru_single_group_tracks_model(self):
+        n = 40_000
+        mcfg = dataclasses.replace(M.single_group(), gc_policy="lru")
+        specs = [
+            DriveSpec(mcfg, (W.trimmed(W.uniform(GEOM.lba_pages, n), t),),
+                      seed=3, name=f"lru/t={t}")
+            for t in TRIM_FRACS
+        ]
+        fleet = simulate_fleet(GEOM, specs, sampler="numpy")
+        # reserve-adjusted base utilization, as in the Fig.-1 equilibrium
+        # test: pool reserve + open blocks hold ~3 blocks of spare space
+        usable = GEOM.pba_pages - 3 * GEOM.pages_per_block
+        r_base = GEOM.lba_pages / usable
+        window = 4_000
+        for i, t in enumerate(TRIM_FRACS):
+            assert_invariants(fleet.state(i), f"t={t}")
+            assert int(fleet.state(i)["n_dropped"]) == 0
+            # the stream holds ~t of the LBA trimmed at steady state
+            t_meas = fleet.trim_fraction()[i]
+            assert t_meas == pytest.approx(t, abs=0.03), (t, t_meas)
+            wa_sim = _equilibrium_wa(fleet, i, window)
+            wa_model = float(A.wa_from_op_ratio(
+                A.effective_op_ratio(r_base, t_meas)
+            ))
+            assert wa_sim == pytest.approx(wa_model, rel=0.15), (
+                f"t={t}: simulated {wa_sim:.3f} vs model {wa_model:.3f}"
+            )
+
+    def test_wa_with_trim_composition(self):
+        """wa_with_trim is exactly the advertised composition."""
+        r, t = 0.72, 0.25
+        assert float(A.wa_with_trim(r, t)) == pytest.approx(
+            float(A.wa_from_op_ratio(A.effective_op_ratio(r, t))), rel=1e-6
+        )
+
+
+class TestMonotoneInTrimFraction:
+    """Acceptance bar: WA decreases monotonically in t for every policy
+    cell. Same seed per policy → common random numbers, and the op draw
+    (u_op < t) couples the trim sets monotonically across t, so the
+    comparison is variance-free by construction."""
+
+    @pytest.mark.parametrize("preset", ["wolf", "fdp", "single"])
+    def test_wa_monotone_decreasing(self, preset):
+        n = 20_000
+        make = {"wolf": M.wolf, "fdp": M.fdp, "single": M.single_group}[preset]
+        specs = [
+            DriveSpec(
+                make(), (W.trimmed(W.two_modal(GEOM.lba_pages, n), t),),
+                seed=5, name=f"{preset}/t={t}",
+            )
+            for t in TRIM_FRACS
+        ]
+        fleet = simulate_fleet(GEOM, specs, sampler="numpy")
+        window = 2_000
+        was = [_equilibrium_wa(fleet, i, window) for i in range(len(specs))]
+        for i, t in enumerate(TRIM_FRACS):
+            assert_invariants(fleet.state(i), f"{preset}/t={t}")
+        for a, b, t in zip(was, was[1:], TRIM_FRACS[1:]):
+            assert b < a, (
+                f"{preset}: WA {was} not decreasing at t={t}"
+            )
+
+
+class TestTpccChurn:
+    """The insert/update/delete lifecycle workload: runs under every
+    engine, holds its hot table partially trimmed, and frees WA relative
+    to the trim-free tpcc_like shape."""
+
+    def test_churn_trims_land_in_hot_group(self):
+        n = 20_000
+        res = M.simulate(GEOM, M.wolf(), [W.tpcc_churn(GEOM.lba_pages, n)],
+                         seed=7)
+        assert_invariants(res.state, "tpcc_churn")
+        assert int(res.state["n_trim"]) > 0
+        assert int(res.state["n_dropped"]) == 0
+        # the churned (hot) group floats below full occupancy; the
+        # append-only cold group stays fully mapped
+        sizes = W.tpcc_like(GEOM.lba_pages, n).sizes
+        grp_live = np.asarray(res.state["grp_live"])
+        assert grp_live[0] == sizes[0], "cold group must stay fully mapped"
+        assert grp_live[2] < sizes[2] * 0.85, "hot group must churn"
+
+    def test_churn_wa_below_pure_write_tpcc(self):
+        n = 20_000
+        churn = M.simulate(GEOM, M.wolf(), [W.tpcc_churn(GEOM.lba_pages, n)],
+                           seed=8)
+        pure = M.simulate(GEOM, M.wolf(), [W.tpcc_like(GEOM.lba_pages, n)],
+                          seed=8)
+        assert churn.wa_total < pure.wa_total
+
+
+class TestTrimEngineBasics:
+    def test_retrim_and_remap_roundtrip(self):
+        """A trim-heavy stream keeps the carried counters exact through
+        unmap → re-map cycles (split and oracle engines agree)."""
+        n = 8_000
+        phases = [W.trimmed(W.uniform(GEOM.lba_pages, n), 0.5)]
+        split = M.simulate(GEOM, M.single_group(), phases, seed=9)
+        oracle = M.simulate(GEOM, M.single_group(), phases, seed=9,
+                            fast_path=False, gc_impl="reference")
+        for key, arr in split.state.items():
+            np.testing.assert_array_equal(
+                np.asarray(arr), np.asarray(oracle.state[key]),
+                err_msg=f"state[{key}]",
+            )
+        st = split.state
+        assert int(st["n_trim"]) > 0
+        assert int(st["mapped_pages"]) == int(
+            np.asarray(st["page_map"] >= 0).sum()
+        )
+        # writes + trims == events
+        assert int(st["n_app"]) + int(st["n_trim"]) == n
+
+    def test_device_sampler_matches_trim_distribution(self):
+        """The on-device op sampler holds the same steady-state trimmed
+        fraction as the host sampler."""
+        n = 20_000
+        t = 0.3
+        spec = [DriveSpec(M.single_group(),
+                          (W.trimmed(W.uniform(GEOM.lba_pages, n), t),),
+                          seed=11)]
+        for sampler in ("numpy", "jax"):
+            fleet = simulate_fleet(GEOM, spec, sampler=sampler)
+            assert fleet.trim_fraction()[0] == pytest.approx(t, abs=0.04), (
+                sampler
+            )
+            assert_invariants(fleet.state(0), sampler)

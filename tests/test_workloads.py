@@ -67,3 +67,99 @@ class TestPhases:
         sizes = W.split_sizes(lba, fracs)
         assert sum(sizes) == lba
         assert all(s >= 0 for s in sizes)
+
+
+@pytest.mark.trim
+class TestOpStreams:
+    """Op-stream phases: per-group trim probabilities + the two samplers."""
+
+    def test_pure_write_sample_ops_matches_sample(self):
+        """On a trim-free phase, sample_ops consumes exactly the draws
+        sample does — the bit-compat anchor for the op engine."""
+        phase = W.two_modal(10_000, 5_000)
+        assert not phase.has_trim
+        lbas = phase.sample(np.random.default_rng(42))
+        ops, lbas2 = phase.sample_ops(np.random.default_rng(42))
+        np.testing.assert_array_equal(lbas, lbas2)
+        assert not ops.any()
+
+    def test_sample_rejects_op_phase(self):
+        phase = W.trimmed(W.uniform(1_000, 10), 0.5)
+        with pytest.raises(AssertionError):
+            phase.sample(np.random.default_rng(0))
+
+    def test_trimmed_scalar_and_per_group(self):
+        base = W.two_modal(10_000, 10)
+        assert W.trimmed(base, 0.3).trim_probs == (0.3, 0.3)
+        assert W.trimmed(base, (0.0, 0.4)).trim_probs == (0.0, 0.4)
+        with pytest.raises(AssertionError):
+            W.trimmed(base, (0.1,))  # wrong group count
+        with pytest.raises(AssertionError):
+            W.trimmed(base, 1.5)  # not a probability
+
+    def test_trim_rate_per_group(self):
+        phase = W.trimmed(
+            W.two_modal(20_000, 100_000, p_hot=0.9, frac_hot=0.5),
+            (0.0, 0.4),
+        )
+        ops, lbas = phase.sample_ops(np.random.default_rng(1))
+        hot = lbas >= phase.sizes[0]
+        assert ops[~hot].mean() == 0.0
+        assert ops[hot].mean() == pytest.approx(0.4, abs=0.01)
+
+    def test_monotone_coupling_across_trim_fracs(self):
+        """Same seed → the t2-trim set contains the t1-trim set (t1 < t2):
+        the variance-free coupling the monotonicity acceptance test uses."""
+        base = W.uniform(5_000, 20_000)
+        o1, l1 = W.trimmed(base, 0.1).sample_ops(np.random.default_rng(7))
+        o2, l2 = W.trimmed(base, 0.4).sample_ops(np.random.default_rng(7))
+        np.testing.assert_array_equal(l1, l2)
+        assert (o2 >= o1).all()
+
+    def test_utilization_sweep_helper(self):
+        phases = W.utilization_sweep(10_000, 50, trim_fracs=(0.0, 0.25))
+        assert len(phases) == 2
+        assert not phases[0].has_trim
+        assert phases[1].trim_probs == (0.25,)
+
+    def test_tpcc_churn_shape(self):
+        """Churn keeps the tpcc_like temperature shape; only the hot
+        (orders) cluster churns hard, the cold majority never trims."""
+        churn = W.tpcc_churn(100_000, 10)
+        base = W.tpcc_like(100_000, 10)
+        assert churn.sizes == base.sizes and churn.probs == base.probs
+        assert churn.trim_probs[0] == 0.0
+        assert churn.trim_probs[2] == pytest.approx(1 / 3, rel=1e-6)
+        assert churn.has_trim
+
+    def test_phase_param_arrays_carry_trim_probs(self):
+        phases = [W.tpcc_churn(9_999, 10), W.uniform(9_999, 10)]
+        params = W.phase_param_arrays(phases, p_max=3)
+        assert params["trim_probs"].shape == params["probs"].shape
+        np.testing.assert_allclose(
+            params["trim_probs"][0, :3], np.asarray(phases[0].trim_probs)
+        )
+        assert (params["trim_probs"][1:] == 0).all()
+
+    def test_device_sampler_ops_distribution(self):
+        """sample_phases_device(with_ops=True) draws ops at the phase's
+        per-group trim rates (same distribution as the host sampler)."""
+        import jax
+
+        phase = W.trimmed(
+            W.two_modal(20_000, 50_000, p_hot=0.9, frac_hot=0.5),
+            (0.0, 0.3),
+        )
+        params = W.phase_param_arrays([phase])
+        ops, lbas = W.sample_phases_device(
+            jax.random.PRNGKey(0), params, phase.n_writes, with_ops=True
+        )
+        ops, lbas = np.asarray(ops), np.asarray(lbas)
+        hot = lbas >= phase.sizes[0]
+        assert ops[~hot].mean() == 0.0
+        assert ops[hot].mean() == pytest.approx(0.3, abs=0.02)
+        # pure-write path is unchanged: no third key consumed
+        lbas_plain = np.asarray(W.sample_phases_device(
+            jax.random.PRNGKey(0), params, phase.n_writes
+        ))
+        assert lbas_plain.shape == lbas.shape

@@ -118,6 +118,69 @@ class TestStepEquivalence:
         )
 
 
+@pytest.mark.trim
+class TestOpStreamEquivalence:
+    """An all-WRITE op stream must reproduce the pure-write engine
+    bit-identically — state, counters, WA curves — under jit and vmap
+    (the op-stream tentpole's baseline-compatibility bar). With the host
+    sampler, Phase.sample_ops consumes exactly the draws Phase.sample
+    would on a pure-write phase, so the event sequences are identical and
+    any divergence is the op engine's fault."""
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.sampled_from(sorted(_MANAGERS)),
+        st.sampled_from(["two_modal", "tpcc", "swap"]),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_all_write_ops_match_write_engine_under_jit(
+        self, manager, workload, seed
+    ):
+        mcfg = _MANAGERS[manager]()
+        phases = _phases(workload, np.random.default_rng(seed))
+        base = M.simulate(GEOM, mcfg, phases, seed=seed)
+        ops = M.simulate(GEOM, mcfg, phases, seed=seed, ops_stream=True)
+        _assert_identical(ops, base, f"ops:{manager}/{workload}#{seed}")
+        assert int(ops.state["n_trim"]) == 0
+
+    def test_all_write_ops_match_write_engine_under_vmap(self):
+        """Whole mixed fleet (every step-structure partition forced onto
+        the op engine) vs the pure-write fleet."""
+        lba, n = GEOM.lba_pages, N_WRITES
+        specs = [
+            DriveSpec(M.wolf(), (W.two_modal(lba, n),), seed=1),
+            DriveSpec(M.fdp(), (W.two_modal(lba, n),), seed=2),
+            DriveSpec(M.single_group(), (W.tpcc_like(lba, n),), seed=3),
+            DriveSpec(M.wolf(ewma_a=0.6, interval_frac=0.05),
+                      (W.two_modal(lba, n),), seed=4),
+            DriveSpec(M.wolf(), tuple(W.swap_phases(lba, n // 2)), seed=5),
+            DriveSpec(M.wolf_dynamic(), (W.tpcc_like(lba, n),), seed=6),
+        ]
+        base = simulate_fleet(GEOM, specs, sampler="numpy")
+        ops = simulate_fleet(GEOM, specs, sampler="numpy", ops_stream=True)
+        np.testing.assert_array_equal(ops.app, base.app)
+        np.testing.assert_array_equal(ops.mig, base.mig)
+        for i, s in enumerate(specs):
+            for key, arr in ops.state(i).items():
+                np.testing.assert_array_equal(
+                    np.asarray(arr), np.asarray(base.state(i)[key]),
+                    err_msg=f"{s.label}: state[{key}]",
+                )
+        np.testing.assert_array_equal(
+            ops.wa_curves(1000), base.wa_curves(1000)
+        )
+
+    def test_ops_engine_split_matches_oracle(self):
+        """Both step engines agree on an op stream WITH trims (jit)."""
+        phases = [W.trimmed(W.two_modal(GEOM.lba_pages, N_WRITES), 0.25)]
+        for manager in ("wolf", "fdp", "wolf_dynamic", "single"):
+            mcfg = _MANAGERS[manager]()
+            split = M.simulate(GEOM, mcfg, phases, seed=13)
+            oracle = M.simulate(GEOM, mcfg, phases, seed=13,
+                                fast_path=False, gc_impl="reference")
+            _assert_identical(split, oracle, f"trim:{manager}")
+
+
 class TestStridedTrace:
     """trace_every=k cumulative counters == dense trace at steps k·j."""
 
@@ -194,17 +257,22 @@ class TestInvariantChecker:
         st.sampled_from(["two_modal", "tpcc"]),
         st.integers(min_value=0, max_value=10_000),
         st.sampled_from(["bulk", "reference"]),
+        st.sampled_from([0.0, 0.2, 0.5]),
     )
     def test_invariants_after_random_segments(
-        self, manager, workload, seed, gc_impl
+        self, manager, workload, seed, gc_impl, trim_frac
     ):
         mcfg = _MANAGERS[manager]()
         rng = np.random.default_rng(seed)
         phases = _phases(workload, rng)
+        if trim_frac:  # random interleaved TRIMs through the op engine
+            phases = [W.trimmed(ph, trim_frac) for ph in phases]
         # split the stream into irregular segments: the checker must hold
         # at every re-entry point, not only at the end of a clean run
         res = M.simulate(GEOM, mcfg, phases, seed=seed, gc_impl=gc_impl)
-        assert_invariants(res.state, f"{manager}/{workload}/{gc_impl}")
+        assert_invariants(
+            res.state, f"{manager}/{workload}/{gc_impl}/t={trim_frac}"
+        )
 
     def test_checker_catches_drift(self):
         import jax.numpy as jnp
@@ -217,6 +285,10 @@ class TestInvariantChecker:
         assert not bool(bad.check_invariants()["free_blocks"])
         bad = good.replace(grp_surplus=good.grp_surplus.at[0].add(1))
         assert not bool(bad.check_invariants()["grp_surplus"])
+        bad = good.replace(mapped_pages=good.mapped_pages - 1)
+        assert not bool(bad.check_invariants()["mapped_pages"])
+        bad = good.replace(grp_live=good.grp_live.at[0].add(1))
+        assert not bool(bad.check_invariants()["grp_live"])
         bad = good.replace(
             page_map=good.page_map.at[1].set(good.page_map[0])
         )
