@@ -56,6 +56,10 @@ from benchmarks.common import report, table, timer
 POLICIES = (
     ("wolf", M.wolf),
     ("wolf-dynamic", M.wolf_dynamic),
+    # wear-leveled weight point of the unified victim score (β=0.25):
+    # benchmarked so the scoring layer's cost shows up in the trajectory
+    # and the wear columns have a leveled row to compare against
+    ("wolf-wear", M.wolf_wear),
     ("fdp", M.fdp),
     ("single", M.single_group),
 )
@@ -93,7 +97,7 @@ def run(full: bool = False, smoke: bool = False,
         out_path: str | None = None, only: str | None = None) -> dict:
     geom = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8)
     writes = 60_000 if full else (4_000 if smoke else 20_000)
-    seeds = (0,) if smoke else (0, 1)  # 4 policies × 5 workloads × seeds
+    seeds = (0,) if smoke else (0, 1)  # 5 policies × 5 workloads × seeds
     specs = grid_specs(geom, writes, seeds, only=only)
 
     # -- fleet path: warm the jit cache, then time steady-state ------------
@@ -141,14 +145,22 @@ def run(full: bool = False, smoke: bool = False,
     speedup = fleet_dps / loop_dps
 
     window = max(writes // 10, 500)
+    # endurance columns ride on the carried O(1) aggregates — no extra
+    # simulation work, just a read-off per drive
+    wear_var = fleet.wear_variance()
+    wear_imb = fleet.wear_imbalance()
     rows = []
     cells: dict[str, dict] = {}
     for i, s in enumerate(specs):
         cell = s.name.rsplit("#", 1)[0]  # "policy/workload"
-        c = cells.setdefault(cell, {"sec": 0.0, "n": 0, "wa": []})
+        c = cells.setdefault(
+            cell, {"sec": 0.0, "n": 0, "wa": [], "wvar": [], "wimb": []}
+        )
         c["sec"] += drive_secs[i]
         c["n"] += 1
         c["wa"].append(float(fleet.wa_total[i]))
+        c["wvar"].append(float(wear_var[i]))
+        c["wimb"].append(float(wear_imb[i]))
         if s.seed != seeds[0]:
             continue
         curve = fleet.result(i).wa_curve(window)
@@ -157,6 +169,8 @@ def run(full: bool = False, smoke: bool = False,
             "wa_total": round(float(fleet.wa_total[i]), 3),
             "wa_equilibrium": round(float(curve[-3:].mean()), 3),
             "loop_wa_total": round(loop_results[i].wa_total, 3),
+            "wear_var": round(float(wear_var[i]), 2),
+            "wear_imbalance": round(float(wear_imb[i]), 3),
         })
     print(table(rows, list(rows[0].keys())))
     summary = {
@@ -218,6 +232,10 @@ def run(full: bool = False, smoke: bool = False,
                 # cells too fast to time reliably
                 "sec": round(c["sec"], 4),
                 "wa_total_mean": round(sum(c["wa"]) / c["n"], 4),
+                # endurance context (never gated, like the WA column):
+                # erase-count variance and max/mean P-E imbalance
+                "wear_var_mean": round(sum(c["wvar"]) / c["n"], 4),
+                "wear_imbalance_mean": round(sum(c["wimb"]) / c["n"], 4),
             }
             for name, c in sorted(cells.items())
         },

@@ -15,6 +15,11 @@ report prints simulated WA against the Frankie effective-OP prediction
 ``wa_from_op_ratio(effective_op_ratio(r, t))`` — trimmed space is dynamic
 over-provisioning, so WA falls with t along the model curve.
 
+A final wear sweep runs (α, β, γ, τ) victim-score weight points — greedy,
+two wear-leveling strengths, LRU — as one more fleet grid and reports each
+point's erase-count variance, max/mean P-E imbalance, and DWPD projection
+next to its WA: the endurance-vs-WA trade-off in a single compiled call.
+
     PYTHONPATH=src python examples/fleet_sweep.py --writes 20000 --seeds 2
 """
 
@@ -107,6 +112,43 @@ def main():
               f"WA_model={wa_model:6.3f}  err={errs[-1]:+7.1%}")
     print(f"trim-sweep model vs simulation: mean |rel err| = "
           f"{np.mean(np.abs(errs)):.1%}, worst = {np.max(np.abs(errs)):.1%}")
+
+    # -- wear weight sweep: (α, β, γ, τ) victim-score points in ONE grid ----
+    # GC policy is a traced weight vector, so the endurance/WA trade-off is
+    # a single fleet call: greedy is (1,0,0,0) and the wear points add
+    # β·erase_count pressure to the same score. Endurance read-outs come
+    # straight off the carried erase aggregates — no extra reduction.
+    skew = (W.two_modal(lba, args.writes, p_hot=0.9, frac_hot=0.2),)
+    points = [
+        ("greedy     (β=0)   ", M.wolf()),
+        ("wear       (β=0.25)", M.wolf_wear()),
+        ("wear-heavy (β=1.0) ", dataclasses.replace(
+            M.wolf_wear(), gc_beta=1.0)),
+        ("lru        (γ=1)   ", M.wolf_lru()),
+    ]
+    wear_specs = [
+        DriveSpec(mcfg, skew, seed=7, name=nm.split()[0])
+        for nm, mcfg in points
+    ]
+    wear_fleet = simulate_fleet(geom, wear_specs, sampler="jax",
+                                devices=args.devices)
+    wvar = wear_fleet.wear_variance()
+    wimb = wear_fleet.wear_imbalance()
+    dwpd = wear_fleet.lifetime_dwpd()
+    print("\nwear weight sweep (skewed two_modal, p_hot=0.9/frac_hot=0.2):")
+    for i, (nm, _) in enumerate(points):
+        print(f"  {nm}  WA={wear_fleet.wa_total[i]:6.3f}  "
+              f"Var[P-E]={wvar[i]:8.2f}  max/mean={wimb[i]:5.2f}  "
+              f"DWPD@3k={dwpd[i]:6.2f}")
+    var_ratio = wvar[0] / max(wvar[1], 1e-9)
+    wa_delta = wear_fleet.wa_total[1] / wear_fleet.wa_total[0] - 1.0
+    print(f"wear (β=0.25) vs greedy: erase-variance ÷{var_ratio:.1f} "
+          f"for WA {wa_delta:+.1%} — leveling is not free, but cheap")
+    # larger β overshoots: GC starts cleaning full cold blocks, churning
+    # erases, so the variance win SHRINKS while the WA tax grows
+    assert var_ratio >= 2.0, (
+        f"wear point should level >=2x vs greedy, got {var_ratio:.2f}"
+    )
 
 
 if __name__ == "__main__":

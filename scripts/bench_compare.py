@@ -44,6 +44,20 @@ def compare(base: dict, fresh: dict, tol: float) -> int:
     b_cells, f_cells = base.get("cells", {}), fresh.get("cells", {})
     min_sec = 0.25  # cells timed faster than this are scheduler noise
     one_sided = 0
+    # per-cell keys this tool knows how to judge; anything else a cell
+    # carries (new columns added by a later bench schema, e.g. wear
+    # statistics) is REPORT-ONLY — an unknown key must never gate, and
+    # must never make an older baseline incomparable
+    gated_keys = {key, "sec", "wa_total_mean"}
+    extra_keys = sorted(
+        {k for c in (*b_cells.values(), *f_cells.values()) for k in c}
+        - gated_keys
+    )
+    if extra_keys:
+        print(
+            "NOTE: cells carry keys this gate does not judge "
+            f"(report-only): {', '.join(extra_keys)}"
+        )
     for name in sorted(set(b_cells) | set(f_cells)):
         # a cell present on only one side (grid grew or shrank between
         # runs — e.g. new op-stream workloads) is REPORT-ONLY: there is

@@ -7,6 +7,9 @@
 #   scripts/run_tests.sh --trim-smoke   # TRIM/op-stream lane: the engine-equivalence
 #                                       # + invariant tests marked `trim`, plus one
 #                                       # op-stream bench cell (tpcc_churn)
+#   scripts/run_tests.sh --wear-smoke   # wear/endurance lane: the scoring-equivalence
+#                                       # + erase-accounting tests marked `wear`, plus
+#                                       # one wear-leveling bench cell (wolf-wear)
 #   scripts/run_tests.sh --bench-smoke  # reduced fleet benchmark → BENCH_fleet.json
 #   scripts/run_tests.sh --bench-compare  # fresh smoke run diffed against the
 #                                         # committed BENCH_fleet.json; fails on
@@ -45,6 +48,23 @@ if [[ "${1:-}" == "--trim-smoke" ]]; then
     python -m pytest -q -m trim
     trim_bench_cell
     exit 0
+fi
+
+if [[ "${1:-}" == "--wear-smoke" ]]; then
+    # focused wear/endurance lane: every test marked `wear` (victim-scoring
+    # equivalence oracles, erase-accounting conservation, wear analytics,
+    # the mixed-weight fleet sweep), then one wear-leveling bench cell
+    # (the wolf-wear/two_modal column, scratch output — baselines stay
+    # untouched). --fast subsumes the tests; this lane is the quick loop
+    # for iterating on the scoring layer.
+    python -m pytest -q -m wear
+    export PYTHONPATH=".:${PYTHONPATH}"
+    scratch="$(mktemp /tmp/bench_wear.XXXXXX.json)"
+    status=0
+    python benchmarks/bench_fleet.py --smoke --only wolf-wear/two_modal \
+        --out "$scratch" || status=$?
+    rm -f "$scratch"
+    exit "$status"
 fi
 
 if [[ "${1:-}" == "--bench-compare" ]]; then

@@ -38,6 +38,10 @@ __all__ = [
     "effective_op_ratio",
     "wa_with_trim",
     "lambertw0",
+    "wear_variance",
+    "wear_imbalance",
+    "lifetime_host_writes",
+    "dwpd_from_lifetime",
 ]
 
 
@@ -154,6 +158,75 @@ def wa_with_trim(r: jax.Array, trim_frac: jax.Array, *,
     ``trim_frac`` fraction of the logical span trimmed: eq. 3 evaluated at
     the Frankie effective OP ratio."""
     return wa_from_op_ratio(effective_op_ratio(r, trim_frac), iters=iters)
+
+
+# ---------------------------------------------------------------------------
+# Wear / endurance (per-block P-E counts → device-lifetime projections).
+#
+# The simulator carries erase_count ([K] P-E cycles per block) plus the O(1)
+# aggregates erase_total (Σe) and erase_sq_total (Σe²), so these reduce to
+# arithmetic on three scalars — no block-array reduction at analysis time.
+# Endurance is a first-order design constraint alongside WA (Dubeyko,
+# arXiv:1907.11825); GC strategy trades migration cost against it (Nagel et
+# al., arXiv:1807.09313) — the (α, β, γ, τ) victim score sweeps that
+# trade-off and these functions score its endurance side.
+# ---------------------------------------------------------------------------
+
+def wear_variance(erase_total: jax.Array, erase_sq_total: jax.Array,
+                  n_blocks: int) -> jax.Array:
+    """Population variance of per-block erase counts from the carried
+    aggregates: Var[e] = Σe²/K − (Σe/K)²."""
+    n = jnp.asarray(n_blocks, jnp.float32)
+    mean = jnp.asarray(erase_total, jnp.float32) / n
+    return jnp.asarray(erase_sq_total, jnp.float32) / n - mean * mean
+
+
+def wear_imbalance(erase_count: jax.Array) -> jax.Array:
+    """Max/mean P-E ratio over the block array (1.0 = perfectly level).
+
+    The device dies when its WORST block exhausts its P-E budget, so the
+    usable endurance of an unlevel drive scales down by this factor. Takes
+    the [K] array (one reduction — analysis-time only); guarded for the
+    zero-erase start-of-life state.
+    """
+    e = jnp.asarray(erase_count, jnp.float32)
+    mean = jnp.mean(e)
+    return jnp.where(mean > 0.0, jnp.max(e) / jnp.maximum(mean, 1e-12), 1.0)
+
+
+def lifetime_host_writes(*, n_blocks: int, pages_per_block: int,
+                         pe_cycles: float, wa: jax.Array,
+                         imbalance: jax.Array) -> jax.Array:
+    """Total host writes (in pages) until the worst block exhausts its P-E
+    budget, given the drive's measured WA and wear imbalance.
+
+    Each erase rewrites one block of B pages, so physical page writes per
+    block-lifetime budget are K·B·PE. Host writes get WA× amplified, and an
+    unlevel drive burns out when its hottest block — erased ``imbalance``×
+    the mean rate — hits PE:
+
+        host_pages = K · B · PE / (WA · imbalance)
+    """
+    phys_budget = jnp.asarray(
+        n_blocks * pages_per_block * pe_cycles, jnp.float32
+    )
+    return phys_budget / (
+        jnp.asarray(wa, jnp.float32)
+        * jnp.maximum(jnp.asarray(imbalance, jnp.float32), 1.0)
+    )
+
+
+def dwpd_from_lifetime(host_pages: jax.Array, *, lba_pages: int,
+                       years: float = 5.0) -> jax.Array:
+    """Drive-writes-per-day sustainable over a ``years`` warranty window.
+
+    host_pages / lba_pages = total full-drive writes (TBW in units of the
+    logical capacity); divide by the window's days for DWPD.
+    """
+    days = jnp.asarray(years * 365.0, jnp.float32)
+    return jnp.asarray(host_pages, jnp.float32) / (
+        jnp.asarray(lba_pages, jnp.float32) * days
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -176,6 +176,54 @@ class FleetResult:
             )
         return out
 
+    # -- wear / endurance analytics (per-block P-E counts) ------------------
+
+    def wear_variance(self) -> np.ndarray:
+        """[B] population variance of per-block erase counts, from the O(1)
+        carried aggregates (no block-array reduction)."""
+        from repro.core.analytics import wear_variance
+
+        assert self.geom is not None, "fleet built without geometry"
+        k = self.geom.n_blocks
+        return np.array([
+            float(wear_variance(
+                self.state(i)["erase_total"],
+                self.state(i)["erase_sq_total"], k,
+            ))
+            for i in range(len(self.specs))
+        ])
+
+    def wear_imbalance(self) -> np.ndarray:
+        """[B] max/mean P-E ratio per drive (1.0 = perfectly level)."""
+        from repro.core.analytics import wear_imbalance
+
+        return np.array([
+            float(wear_imbalance(self.state(i)["erase_count"]))
+            for i in range(len(self.specs))
+        ])
+
+    def lifetime_dwpd(self, *, pe_cycles: float = 3000.0,
+                      years: float = 5.0) -> np.ndarray:
+        """[B] sustainable drive-writes-per-day over a warranty window,
+        projecting each drive's measured WA and wear imbalance onto a NAND
+        P-E budget (default 3k cycles, TLC-class)."""
+        from repro.core.analytics import (
+            dwpd_from_lifetime,
+            lifetime_host_writes,
+        )
+
+        assert self.geom is not None, "fleet built without geometry"
+        host = lifetime_host_writes(
+            n_blocks=self.geom.n_blocks,
+            pages_per_block=self.geom.pages_per_block,
+            pe_cycles=pe_cycles,
+            wa=jnp.asarray(self.wa_total, jnp.float32),
+            imbalance=jnp.asarray(self.wear_imbalance(), jnp.float32),
+        )
+        return np.asarray(dwpd_from_lifetime(
+            host, lba_pages=self.geom.lba_pages, years=years
+        ))
+
     def model_error(self, window: int = 2000, tail: int = 3,
                     pred: np.ndarray | None = None) -> np.ndarray:
         """[B] relative error of the eq. 3/5 prediction vs the simulated

@@ -56,6 +56,27 @@ def wolf_lru(**kw) -> ManagerConfig:
     )
 
 
+def wolf_wear(**kw) -> ManagerConfig:
+    """Wolf with wear-leveling victim scoring: the (α, β, γ, τ) score at
+    the ``wear`` preset point (α=1, β>0) trades reclaim efficiency against
+    per-block P-E imbalance — the ROADMAP's "does wear-leveling cost Wolf
+    its WA advantage?" comparison point. β is swept per-drive in fleets
+    (``gc_beta=...``); the preset default is GC_WEIGHT_PRESETS["wear"]."""
+    return ManagerConfig(
+        name="wolf-wear", alloc_mode="wolf", gc_policy="wear",
+        movement_ops=True, td_mode="static", **kw
+    )
+
+
+def wolf_trim_aware(**kw) -> ManagerConfig:
+    """Wolf with the τ term active: victims rich in trimmed-but-unerased
+    slots are deprioritised (the ROADMAP's trim-aware GC open idea)."""
+    return ManagerConfig(
+        name="wolf-trim-aware", alloc_mode="wolf", gc_policy="trim_aware",
+        movement_ops=True, td_mode="static", **kw
+    )
+
+
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass

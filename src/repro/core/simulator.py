@@ -112,13 +112,37 @@ Architecture (post bulk-GC refactor):
   :func:`_gc_drain_reference` (``SimContext.gc_impl="reference"``) and is
   asserted elementwise-identical in tests/test_bulk_gc.py.
 
+* **GC victim selection is ONE traced score, not a policy branch.**
+  :func:`_select_victim` maximises
+
+      S(blk) = α·(B − live) − γ·stamp − β·erase_count − τ·trim_dead
+
+  over the CLOSED blocks of the GC group (others masked to -inf).
+  α scores reclaim benefit (pages freed by erasing the block), γ scores
+  migration cost by recency (a recently-claimed block's pages are about
+  to die on their own — migrating them is wasted work, the classic LRU
+  rationale), β steers selection away from high-P-E blocks (wear
+  leveling against the carried ``erase_count``), and τ deprioritises
+  blocks rich in trimmed-but-unerased slots (``trim_dead``). The legacy
+  policies are EXACT weight points — greedy = (1,0,0,0) ≡ argmin(live),
+  lru = (0,0,1,0) ≡ argmin(stamp), bit-identical victims including the
+  first-index tie-break, because every term is an int32 counter cast to
+  float32 (exact below 2^24) — and wear/trim-aware policies are just
+  other points of the same traced (α, β, γ, τ) vector, so a vmapped
+  fleet sweeps the whole policy space in one compiled grid with no
+  step-structure change. Victim selection stays the only full
+  block-array reduction on the write path: the score reads four carried
+  [K] counters elementwise, and every erase site maintains
+  ``erase_count``/``erase_total``/``erase_sq_total``/``trim_dead`` in
+  O(1) (cross-checked by ``SimState.check_invariants``).
+
 * **Policy switches: traced data where drives differ, trace-time structure
-  where they can't.** GC policy (greedy/LRU), movement firing, FDP
+  where they can't.** The GC weight vector, movement firing, FDP
   assumption arrays, and the §5.1 constants ``ewma_a``/``h`` live in a
   per-drive ``policy`` pytree of scalars selected with ``lax.cond`` —
   under jit they are runtime branches, under ``jax.vmap`` selects, which
   is what lets ``core/fleet.py`` batch drives with different manager
-  configs (including EWMA/interval sweeps) into one jitted
+  configs (including EWMA/interval/GC-weight sweeps) into one jitted
   ``vmap(lax.scan)``. But switches that define step STRUCTURE — the
   temperature detector, movement ops, dynamic groups, closed-form
   allocation — dispatch at TRACE time from ``SimContext``
@@ -273,7 +297,10 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
     ), f"alloc {ctx.mcfg.alloc_mode!r} needs the closed form"
     return {
         "alloc_mode": jnp.asarray(_ALLOC_CODES[ctx.mcfg.alloc_mode], jnp.int32),
-        "gc_lru": jnp.asarray(ctx.mcfg.gc_policy == "lru"),
+        # (α, β, γ, τ) victim-score weights (ManagerConfig.gc_weights):
+        # per-drive TRACED data, so one vmapped fleet sweeps the weight
+        # space — greedy/LRU/wear/trim-aware are all points of this vector
+        "gc_w": jnp.asarray(ctx.mcfg.gc_weights(), jnp.float32),
         "movement_ops": jnp.asarray(ctx.mcfg.movement_ops),
         "td_mode": jnp.asarray(_TD_CODES[ctx.mcfg.td_mode], jnp.int32),
         "dynamic_groups": jnp.asarray(ctx.mcfg.dynamic_groups),
@@ -307,6 +334,9 @@ _GC_FIELDS = (
     "group_of", "active_blk", "grp_size", "grp_live", "grp_phys",
     "grp_surplus", "free_blocks", "mapped_pages", "clock", "n_mig",
     "n_dropped", "n_erase",
+    # wear layer: every drain bumps the victim's P-E count + the carried
+    # aggregates and clears its trimmed-slot tally
+    "erase_count", "trim_dead", "erase_total", "erase_sq_total",
 )
 # fields the in-write block allocation (_pop_free_block + seal) can touch
 _ALLOC_FIELDS = (
@@ -522,15 +552,39 @@ def _clear_valid(ctx: SimContext, st: SimState, pm):
 # garbage collection (one victim) — §5.4
 # ---------------------------------------------------------------------------
 
-def _select_victim(ctx: SimContext, st: SimState, g, gc_lru):
+# the emergency valve's fixed weight point: pure greedy reclaim
+GC_W_GREEDY = (1.0, 0.0, 0.0, 0.0)
+
+
+def _select_victim(ctx: SimContext, st: SimState, g, gc_w):
+    """Multi-objective victim selection: one traced score, maximised.
+
+        S(blk) = α·(B − live) − γ·stamp − β·erase_count − τ·trim_dead
+
+    over CLOSED blocks of group g (others masked to -inf). Every term is an
+    int32 counter cast to float32 — exact below 2^24, far beyond any test
+    horizon — so the legacy policies are EXACT weight points with the same
+    first-index tie-break as the argmin they replace: greedy = (1,0,0,0)
+    (argmax of B − live ≡ argmin of live), lru = (0,0,1,0) (argmin of
+    stamp). β > 0 steers GC away from high-P-E blocks (wear leveling);
+    τ > 0 deprioritises blocks rich in trimmed-but-unerased slots. This
+    stays the only full block-array reduction on the write path.
+    """
     closed = (st.state == CLOSED) & (st.group_of == g)
-    score_lru = jnp.where(closed, st.stamp, INT_MAX)
-    score_greedy = jnp.where(closed, st.live, INT_MAX)
-    victim = jnp.argmin(jnp.where(gc_lru, score_lru, score_greedy))
-    # a fully-live greedy victim frees nothing: skip (movement-op no-op guard)
-    ok = closed[victim] & (
-        gc_lru | (st.live[victim] < ctx.geom.pages_per_block)
+    b = ctx.geom.pages_per_block
+    alpha, beta, gamma, tau = gc_w[0], gc_w[1], gc_w[2], gc_w[3]
+    score = (
+        alpha * (b - st.live).astype(jnp.float32)
+        - gamma * st.stamp.astype(jnp.float32)
+        - beta * st.erase_count.astype(jnp.float32)
+        - tau * st.trim_dead.astype(jnp.float32)
     )
+    victim = jnp.argmax(jnp.where(closed, score, -jnp.inf))
+    # a fully-live victim frees nothing: skip unless the policy is
+    # age-driven (γ > 0 — LRU must clean stale blocks even when full;
+    # the old gc_lru boolean guard, generalised)
+    age_driven = gamma > 0.0
+    ok = closed[victim] & (age_driven | (st.live[victim] < b))
     return victim, ok
 
 
@@ -742,6 +796,7 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
 
     # -- erase the victim ---------------------------------------------------
     grp_phys_f = grp_phys.at[g].add(-1)
+    e_old = st.erase_count[victim]
     return st.replace(
         state=state_a.at[victim].set(FREE),
         group_of=group_of.at[victim].set(-1),
@@ -762,6 +817,11 @@ def _gc_drain_bulk(ctx: SimContext, st: SimState, victim, g, policy, rate_fn):
         n_mig=st.n_mig + jnp.sum(ok),
         n_dropped=st.n_dropped + n_lost,
         n_erase=st.n_erase + 1,
+        # wear: one more P-E cycle on the victim; Σe² gains (e+1)² − e²
+        erase_count=st.erase_count.at[victim].add(1),
+        trim_dead=st.trim_dead.at[victim].set(0),
+        erase_total=st.erase_total + 1,
+        erase_sq_total=st.erase_sq_total + 2 * e_old + 1,
     )
 
 
@@ -845,6 +905,7 @@ def _gc_drain_bulk_static(ctx: SimContext, st: SimState, victim, g):
     # -- erase the victim ---------------------------------------------------
     # +1 physical block if one was claimed, -1 for the erased victim
     grp_phys = st.grp_phys.at[g].add(jnp.where(claim_ok, 0, -1))
+    e_old = st.erase_count[victim]
     return st.replace(
         state=state_a.at[victim].set(FREE),
         group_of=group_of.at[victim].set(-1),
@@ -865,6 +926,10 @@ def _gc_drain_bulk_static(ctx: SimContext, st: SimState, victim, g):
         n_mig=st.n_mig + n_ok,
         n_dropped=st.n_dropped + (n_live - n_ok),
         n_erase=st.n_erase + 1,
+        erase_count=st.erase_count.at[victim].add(1),
+        trim_dead=st.trim_dead.at[victim].set(0),
+        erase_total=st.erase_total + 1,
+        erase_sq_total=st.erase_sq_total + 2 * e_old + 1,
     )
 
 
@@ -902,6 +967,7 @@ def _gc_drain_reference(ctx: SimContext, st: SimState, victim, g, demote_fn):
     st = jax.lax.fori_loop(0, b, body, st)
     # erase
     grp_phys = st.grp_phys.at[g].add(-1)
+    e_old = st.erase_count[victim]
     return st.replace(
         state=st.state.at[victim].set(FREE),
         group_of=st.group_of.at[victim].set(-1),
@@ -915,10 +981,14 @@ def _gc_drain_reference(ctx: SimContext, st: SimState, victim, g, demote_fn):
         grp_surplus=surplus_of(st.grp_active, grp_phys, st.grp_alloc),
         free_blocks=st.free_blocks + 1,
         n_erase=st.n_erase + 1,
+        erase_count=st.erase_count.at[victim].add(1),
+        trim_dead=st.trim_dead.at[victim].set(0),
+        erase_total=st.erase_total + 1,
+        erase_sq_total=st.erase_sq_total + 2 * e_old + 1,
     )
 
 
-def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_lru,
+def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_w,
             enabled=True):
     """GC one victim in group g; migrate live pages via the bulk drain.
 
@@ -927,12 +997,16 @@ def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_lru,
     are indexed by lba/phase only). The §5.6 demotion rule itself is
     derived from ``policy`` — see _gc_drain_bulk / _target_group_gc.
 
+    gc_w: the traced (α, β, γ, τ) victim-score weights (see
+    :func:`_select_victim`); callers pass ``policy["gc_w"]`` or a fixed
+    point like :data:`GC_W_GREEDY`.
+
     enabled: the caller's firing predicate, folded into the ONE dieted
     drain cond here instead of a second full-state cond at the call site
     (victim selection is a pair of [K] reductions, cheap to run masked).
     """
     assert ctx.gc_impl in ("bulk", "reference"), ctx.gc_impl
-    victim, ok = _select_victim(ctx, st, g, gc_lru)
+    victim, ok = _select_victim(ctx, st, g, gc_w)
     # migrations may need one fresh block beyond the active's free slots:
     # never start a GC with an empty pool (callers keep it ≥ 2).
     ok = ok & (st.free_blocks >= 1) & enabled
@@ -1322,7 +1396,7 @@ def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
     over_budget = st.grp_phys[g] >= st.grp_alloc[g]
     low_pool = st.free_blocks <= mcfg.gc_reserve_blocks
     do_gc = needs_block & (over_budget | low_pool)
-    st = _gc_one(ctx, st, g, policy, lookup, policy["gc_lru"], enabled=do_gc)
+    st = _gc_one(ctx, st, g, policy, lookup, policy["gc_w"], enabled=do_gc)
 
     # emergency valve: if the pool is (nearly) empty, greedily reclaim
     # from the fullest group until headroom returns (bounded loop; only
@@ -1338,7 +1412,8 @@ def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
         victim = jnp.argmin(score)
         g_v = jnp.maximum(s.group_of[victim], 0)
         return (
-            _gc_one(ctx, s, g_v, policy, lookup, jnp.asarray(False)),
+            _gc_one(ctx, s, g_v, policy, lookup,
+                    jnp.asarray(GC_W_GREEDY, jnp.float32)),
             tries + 1,
         )
 
@@ -1357,7 +1432,7 @@ def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
         g_s = jnp.argmax(st.grp_surplus)
         pool_ok = st.free_blocks >= 2  # migration headroom
         st = _gc_one(
-            ctx, st, g_s, policy, lookup, policy["gc_lru"],
+            ctx, st, g_s, policy, lookup, policy["gc_w"],
             enabled=policy["movement_ops"] & (st.grp_surplus[g_s] >= 1)
             & pool_ok,
         )
@@ -1397,8 +1472,13 @@ def _trim_page(ctx: SimContext, st: SimState, lba):
     """
     st, _old_g, old_pm = _invalidate_counts(ctx, st, lba)
     page_map, valid = apply_trim(st.page_map, st.valid, lba, old_pm)
+    # the killed slot is a trimmed-but-unerased hole: tally it on its
+    # block for the victim score's τ term (cleared when the block erases)
+    has = old_pm >= 0
+    blk_c = jnp.maximum(old_pm, 0) // ctx.geom.pages_per_block
     return st.replace(
-        page_map=page_map, valid=valid, n_trim=st.n_trim + 1
+        page_map=page_map, valid=valid, n_trim=st.n_trim + 1,
+        trim_dead=st.trim_dead.at[blk_c].add(jnp.where(has, 1, 0)),
     )
 
 

@@ -67,6 +67,20 @@ class Geometry:
         return self.pba_pages - self.lba_pages
 
 
+# (α, β, γ, τ) victim-score weight points per gc_policy preset; see
+# ManagerConfig.gc_weights. wear's β trades reclaim benefit (pages freed)
+# against per-block P-E imbalance: 0.25 — a page of benefit per 4 cycles
+# of wear skew — levels ~3× harder than greedy at single-digit-% WA cost;
+# larger β overshoots (GC starts cleaning full cold blocks, churning
+# erases faster than it levels them). Swept per-drive via gc_beta.
+GC_WEIGHT_PRESETS = {
+    "greedy": (1.0, 0.0, 0.0, 0.0),
+    "lru": (0.0, 0.0, 1.0, 0.0),
+    "wear": (1.0, 0.25, 0.0, 0.0),
+    "trim_aware": (1.0, 0.0, 0.0, 1.0),
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class ManagerConfig:
     """Block-manager policy knobs. Presets in core/managers.py."""
@@ -76,7 +90,21 @@ class ManagerConfig:
     # over-provisioning allocation: wolf | fdp_assumed | size | freq |
     # optimal | single
     alloc_mode: str = "wolf"
-    gc_policy: str = "greedy"  # greedy | lru
+    # victim-selection preset: greedy | lru | wear | trim_aware. Resolved by
+    # :meth:`gc_weights` into the traced (α, β, γ, τ) score weights; the
+    # explicit gc_* float fields below override individual components.
+    gc_policy: str = "greedy"
+    # multi-objective victim-score weights (None → take from the gc_policy
+    # preset). The score, maximised over CLOSED blocks of the GC group:
+    #   S(blk) = α·(B − live)  − γ·stamp  − β·erase_count  − τ·trim_dead
+    # α: reclaim benefit, γ: migration-cost/recency (LRU), β: wear-leveling,
+    # τ: trim-awareness (deprioritise blocks rich in trimmed-but-unerased
+    # slots). These are per-drive TRACED data in the fleet runner — a batch
+    # sweeps the weight space in one compiled grid.
+    gc_alpha: float | None = None
+    gc_beta: float | None = None
+    gc_gamma: float | None = None
+    gc_trim_penalty: float | None = None
     movement_ops: bool = True
     # temperature detection / page targeting:
     #   static  — page stays in its (workload-defined) group  [Wolf+oracle]
@@ -101,6 +129,23 @@ class ManagerConfig:
     # max(grp_size, this) writes, so tiny/fresh groups don't thrash
     bloom_rotate_min_writes: int = 64
 
+    def gc_weights(self) -> tuple:
+        """Resolve the victim-score weights (α, β, γ, τ) for this drive.
+
+        Starts from the :data:`GC_WEIGHT_PRESETS` entry for ``gc_policy``;
+        any explicitly-set ``gc_alpha``/``gc_beta``/``gc_gamma``/
+        ``gc_trim_penalty`` overrides its component. The legacy policies are
+        exact weight points: greedy = (1,0,0,0) maximises ``B − live`` ≡
+        minimises ``live``; lru = (0,0,1,0) minimises ``stamp`` — both with
+        the same first-index tie-break as the old argmin branch.
+        """
+        base = GC_WEIGHT_PRESETS[self.gc_policy]
+        over = (self.gc_alpha, self.gc_beta, self.gc_gamma,
+                self.gc_trim_penalty)
+        return tuple(
+            float(b if o is None else o) for b, o in zip(base, over)
+        )
+
 
 def bloom_bits(geom: Geometry, mcfg: ManagerConfig) -> int:
     """Bits per group-filter for the §5.6 bloom detector pair."""
@@ -114,6 +159,8 @@ _SIM_STATE_FIELDS = (
     "page_map",
     # block state
     "slot_lba", "valid", "live", "fill", "stamp", "state", "group_of",
+    # wear / endurance (per-block P-E counts + O(1) carried aggregates)
+    "erase_count", "trim_dead", "erase_total", "erase_sq_total",
     # per-group
     "active_blk", "grp_size", "grp_phys", "grp_p", "grp_writes",
     "grp_alloc", "grp_active", "grp_created", "grp_surplus", "grp_live",
@@ -150,6 +197,16 @@ class SimState:
     stamp: jax.Array     # [K] int32 LRU age (claim-time clock)
     state: jax.Array     # [K] int8 FREE/OPEN/CLOSED
     group_of: jax.Array  # [K] int32 owning group, -1 = none
+    # wear/endurance layer: every erase site bumps erase_count[victim] and
+    # the two carried aggregates (cross-checked in check_invariants), so
+    # variance/imbalance analytics are O(1) reads, never reductions
+    erase_count: jax.Array  # [K] int32 per-block P-E (erase) cycles
+    # trimmed-but-unerased slots per block: +1 when a TRIM invalidates a
+    # mapping in the block, reset to 0 when the block is erased. Feeds the
+    # τ term of the victim score; always ≤ fill − live (dead slots)
+    trim_dead: jax.Array  # [K] int32
+    erase_total: jax.Array     # [] int32 == Σ erase_count == n_erase
+    erase_sq_total: jax.Array  # [] int32 == Σ erase_count² (for variance)
     active_blk: jax.Array   # [G] int32 open block per group, -1 = none
     grp_size: jax.Array     # [G] int32 logical pages per group
     grp_phys: jax.Array     # [G] int32 physical blocks per group
@@ -268,6 +325,24 @@ class SimState:
             "fill_bounds": jnp.all(
                 (self.fill >= self.live) & (self.fill <= b)
             ),
+            # wear accounting: the carried aggregates equal the reductions,
+            # the per-block counters never go negative, and every erase
+            # bumped exactly one block (Σ erase_count == n_erase)
+            "erase_conservation": (
+                (self.erase_total == jnp.sum(self.erase_count))
+                & (self.erase_total == self.n_erase)
+            ),
+            "erase_sq_total": self.erase_sq_total
+            == jnp.sum(self.erase_count * self.erase_count),
+            "erase_nonneg": jnp.all(self.erase_count >= 0),
+            # trim_dead counts a subset of each block's dead slots and is
+            # cleared by erase — FREE blocks (fill == 0) sit at 0
+            "trim_dead_bounds": jnp.all(
+                (self.trim_dead >= 0)
+                & (self.trim_dead <= self.fill - self.live)
+            ),
+            "trim_dead_pure_write": (self.n_trim > 0)
+            | jnp.all(self.trim_dead == 0),
         }
 
 
@@ -352,6 +427,10 @@ def init_state(
         ),
         state=jnp.asarray(state_arr),
         group_of=jnp.asarray(group_of),
+        erase_count=jnp.zeros(k, jnp.int32),
+        trim_dead=jnp.zeros(k, jnp.int32),
+        erase_total=jnp.zeros((), jnp.int32),
+        erase_sq_total=jnp.zeros((), jnp.int32),
         active_blk=jnp.full(g_max, -1, jnp.int32),
         grp_size=jnp.asarray(grp_size),
         grp_phys=jnp.asarray(grp_phys),

@@ -112,6 +112,55 @@ class TestFleetEquivalence:
             np.testing.assert_array_equal(valid.sum(1), live)
 
 
+@pytest.mark.wear
+class TestWeightSweepEquivalence:
+    """The (α, β, γ, τ) victim-score weights are traced per-drive data: a
+    mixed-weight 6-drive fleet must agree elementwise with per-drive
+    ``managers.simulate`` runs — greedy/LRU legacy points, the wear and
+    trim-aware presets, and an explicit β override, all in one vmap."""
+
+    def test_mixed_weight_fleet_matches_per_drive(self):
+        import dataclasses
+
+        lba, n = GEOM.lba_pages, 8_000
+        phase = W.two_modal(lba, n, p_hot=0.9, frac_hot=0.2)
+        specs = [
+            DriveSpec(M.wolf(), (phase,), seed=1, name="greedy"),
+            DriveSpec(M.wolf_lru(), (phase,), seed=1, name="lru"),
+            DriveSpec(M.wolf_wear(), (phase,), seed=1, name="wear"),
+            DriveSpec(M.wolf_wear(gc_beta=1.0), (phase,), seed=1,
+                      name="wear-b1"),
+            DriveSpec(M.wolf_trim_aware(), (phase,), seed=1, name="trim-aw"),
+            DriveSpec(
+                dataclasses.replace(
+                    M.wolf(), gc_alpha=1.0, gc_beta=0.5, gc_gamma=0.25
+                ),
+                (phase,), seed=1, name="mixed",
+            ),
+        ]
+        fleet = simulate_fleet(GEOM, specs, sampler="numpy")
+        for i, s in enumerate(specs):
+            ref = M.simulate(GEOM, s.mcfg, list(s.phases), seed=s.seed)
+            np.testing.assert_array_equal(
+                fleet.app[i], ref.app, err_msg=f"app diverged: {s.label}"
+            )
+            np.testing.assert_array_equal(
+                fleet.mig[i], ref.mig, err_msg=f"mig diverged: {s.label}"
+            )
+            for key, arr in ref.state.items():
+                np.testing.assert_array_equal(
+                    np.asarray(fleet.state(i)[key]), np.asarray(arr),
+                    err_msg=f"{s.label}: state[{key}]",
+                )
+        # a pure-write stream leaves τ inert: trim-aware ≡ greedy exactly
+        np.testing.assert_array_equal(fleet.app[4], fleet.app[0])
+        np.testing.assert_array_equal(fleet.mig[4], fleet.mig[0])
+        # the wear drives must actually diverge from greedy (β is live)
+        assert not np.array_equal(fleet.mig[2], fleet.mig[0])
+        # common random numbers: divergence between β points is the policy's
+        assert not np.array_equal(fleet.mig[2], fleet.mig[3])
+
+
 class TestPolicyConstantSweeps:
     """§5.1 constants (ewma_a, interval length) are per-drive policy data:
     one batch can sweep them, elementwise-identical to per-drive runs."""

@@ -48,6 +48,20 @@ def _check_invariants(geom, state):
     sl = np.asarray(state["slot_lba"])
     back = sl[mb, ms]
     np.testing.assert_array_equal(back, np.arange(geom.lba_pages)[mapped])
+    # wear accounting: per-block P-E counts conserve against the carried
+    # aggregates (erase_total / erase_sq_total) and the n_erase counter
+    ec = np.asarray(state["erase_count"], np.int64)
+    assert (ec >= 0).all(), "erase_count non-negative"
+    assert ec.sum() == int(state["n_erase"]), "Σ erase_count == n_erase"
+    assert int(state["erase_total"]) == ec.sum(), "carried erase_total"
+    assert int(state["erase_sq_total"]) == int((ec * ec).sum()), (
+        "carried erase_sq_total"
+    )
+    td = np.asarray(state["trim_dead"])
+    assert (td >= 0).all(), "trim_dead non-negative"
+    assert (td <= fill - live).all(), "trim_dead ≤ dead slots"
+    if int(state["n_trim"]) == 0:
+        assert (td == 0).all(), "pure-write drive has no trimmed slots"
 
 
 class TestEquilibrium:

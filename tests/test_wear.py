@@ -1,0 +1,214 @@
+"""Wear/endurance layer tests: the (α, β, γ, τ) victim-scoring layer must
+reproduce the legacy greedy/LRU argmin selections exactly (per-step oracle
+over random block states AND whole-run bit-identity), the erase accounting
+must conserve, and the wear analytics must read off the carried aggregates.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import managers as M
+from repro.core import simulator as S
+from repro.core import workloads as W
+from repro.core.analytics import (
+    dwpd_from_lifetime,
+    lifetime_host_writes,
+    wear_imbalance,
+    wear_variance,
+)
+from repro.core.ssd import CLOSED, FREE, OPEN, GC_WEIGHT_PRESETS, Geometry
+
+pytestmark = pytest.mark.wear
+
+GEOM = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8, lba_pba=0.7)
+
+
+def _weights(policy: str) -> jnp.ndarray:
+    return jnp.asarray(GC_WEIGHT_PRESETS[policy], jnp.float32)
+
+
+def _random_block_state(rng: np.random.Generator, k: int, b: int, g_max: int):
+    """A random per-step selector input: exactly the fields
+    ``_select_victim`` reads (duck-typed — the selector is a pure function
+    of these arrays)."""
+    return SimpleNamespace(
+        state=jnp.asarray(
+            rng.choice([FREE, OPEN, CLOSED], size=k).astype(np.int8)
+        ),
+        group_of=jnp.asarray(rng.integers(-1, g_max, size=k, dtype=np.int32)),
+        live=jnp.asarray(rng.integers(0, b + 1, size=k, dtype=np.int32)),
+        stamp=jnp.asarray(rng.integers(0, 10_000, size=k, dtype=np.int32)),
+        erase_count=jnp.asarray(
+            rng.integers(0, 500, size=k, dtype=np.int32)
+        ),
+        trim_dead=jnp.asarray(rng.integers(0, b + 1, size=k, dtype=np.int32)),
+    )
+
+
+class TestScoringOracle:
+    """Per-step equivalence: on arbitrary block states, the scoring layer
+    with legacy weights must pick the block the old argmin branch picked —
+    including the first-index tie-break and the empty-candidate case."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_greedy_weights_pick_argmin_live(self, seed):
+        rng = np.random.default_rng(seed)
+        k, b, g_max = 64, 8, 4
+        ctx = SimpleNamespace(geom=SimpleNamespace(pages_per_block=b))
+        fake = _random_block_state(rng, k, b, g_max)
+        g = int(rng.integers(0, g_max))
+        victim, ok = S._select_victim(ctx, fake, g, _weights("greedy"))
+        closed = (np.asarray(fake.state) == CLOSED) & (
+            np.asarray(fake.group_of) == g
+        )
+        live = np.asarray(fake.live)
+        # the legacy branch: argmin over live masked to INT_MAX elsewhere
+        expect = int(np.argmin(np.where(closed, live, np.iinfo(np.int32).max)))
+        assert int(victim) == expect, (seed, g)
+        expect_ok = closed[expect] and live[expect] < b
+        assert bool(ok) == expect_ok, (seed, g)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_lru_weights_pick_argmin_stamp(self, seed):
+        rng = np.random.default_rng(seed)
+        k, b, g_max = 64, 8, 4
+        ctx = SimpleNamespace(geom=SimpleNamespace(pages_per_block=b))
+        fake = _random_block_state(rng, k, b, g_max)
+        g = int(rng.integers(0, g_max))
+        victim, ok = S._select_victim(ctx, fake, g, _weights("lru"))
+        closed = (np.asarray(fake.state) == CLOSED) & (
+            np.asarray(fake.group_of) == g
+        )
+        stamp = np.asarray(fake.stamp)
+        expect = int(
+            np.argmin(np.where(closed, stamp, np.iinfo(np.int32).max))
+        )
+        assert int(victim) == expect, (seed, g)
+        # LRU (age-driven, γ > 0) may clean a fully-live block
+        assert bool(ok) == bool(closed[expect]), (seed, g)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_mixed_weights_match_numpy_score(self, seed):
+        """General weight points agree with a float32 numpy evaluation of
+        the documented score (argmax, first-index ties, -inf masking)."""
+        rng = np.random.default_rng(seed)
+        k, b, g_max = 64, 8, 4
+        ctx = SimpleNamespace(geom=SimpleNamespace(pages_per_block=b))
+        fake = _random_block_state(rng, k, b, g_max)
+        g = int(rng.integers(0, g_max))
+        w = rng.uniform(0.0, 2.0, size=4).astype(np.float32)
+        victim, _ = S._select_victim(ctx, fake, g, jnp.asarray(w))
+        closed = (np.asarray(fake.state) == CLOSED) & (
+            np.asarray(fake.group_of) == g
+        )
+        score = (
+            w[0] * (b - np.asarray(fake.live)).astype(np.float32)
+            - w[2] * np.asarray(fake.stamp).astype(np.float32)
+            - w[1] * np.asarray(fake.erase_count).astype(np.float32)
+            - w[3] * np.asarray(fake.trim_dead).astype(np.float32)
+        ).astype(np.float32)
+        expect = int(np.argmax(np.where(closed, score, -np.inf)))
+        assert int(victim) == expect, (seed, g, w)
+
+
+class TestScoringRunEquivalence:
+    """Whole-run oracle: spelling the legacy policies as explicit weight
+    overrides is bit-identical to the preset string (same traced values)."""
+
+    @settings(max_examples=4, deadline=None)
+    @given(
+        st.sampled_from(["wolf", "wolf_lru", "fdp"]),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_explicit_weights_bit_identical(self, manager, seed):
+        mcfg = getattr(M, manager)()
+        a, b_, g_, t_ = mcfg.gc_weights()
+        explicit = dataclasses.replace(
+            mcfg, gc_alpha=a, gc_beta=b_, gc_gamma=g_, gc_trim_penalty=t_
+        )
+        phase = W.two_modal(GEOM.lba_pages, 6_000)
+        r1 = M.simulate(GEOM, mcfg, [phase], seed=seed)
+        r2 = M.simulate(GEOM, explicit, [phase], seed=seed)
+        np.testing.assert_array_equal(r1.app, r2.app)
+        np.testing.assert_array_equal(r1.mig, r2.mig)
+        for key, arr in r1.state.items():
+            np.testing.assert_array_equal(
+                np.asarray(arr), np.asarray(r2.state[key]),
+                err_msg=f"state[{key}]",
+            )
+
+
+class TestEraseAccounting:
+    def test_wear_counters_conserve_across_policies(self):
+        phase = W.two_modal(GEOM.lba_pages, 10_000, p_hot=0.9, frac_hot=0.2)
+        for mcfg in (M.wolf(), M.wolf_lru(), M.wolf_wear(), M.wolf_dynamic()):
+            res = M.simulate(GEOM, mcfg, [phase], seed=11)
+            ec = np.asarray(res.state["erase_count"], np.int64)
+            assert (ec >= 0).all()
+            assert ec.sum() == int(res.state["n_erase"]), mcfg.name
+            assert int(res.state["erase_total"]) == ec.sum(), mcfg.name
+            assert int(res.state["erase_sq_total"]) == int((ec * ec).sum())
+            # pure-write stream: no trimmed-but-unerased slots anywhere
+            assert not np.asarray(res.state["trim_dead"]).any(), mcfg.name
+            failed = [
+                k for k, ok in res.state.check_invariants().items()
+                if not bool(ok)
+            ]
+            assert not failed, (mcfg.name, failed)
+
+    @pytest.mark.trim
+    def test_trim_dead_tracks_trims_and_clears_on_erase(self):
+        phase = W.trimmed(W.two_modal(GEOM.lba_pages, 10_000), 0.3)
+        res = M.simulate(GEOM, M.wolf(), [phase], seed=5)
+        td = np.asarray(res.state["trim_dead"])
+        fill = np.asarray(res.state["fill"])
+        live = np.asarray(res.state["live"])
+        state = np.asarray(res.state["state"])
+        assert (td >= 0).all() and (td <= fill - live).all()
+        assert not td[state == FREE].any(), "erase clears trim_dead"
+        assert int(res.state["n_trim"]) > 0
+
+
+class TestWearLeveling:
+    def test_wear_preset_reduces_variance_vs_greedy(self):
+        """The acceptance-bar comparison in miniature: the wear weight
+        point must level erases ≥2× (variance) on a skewed workload."""
+        from repro.core.fleet import DriveSpec, simulate_fleet
+
+        phase = W.two_modal(GEOM.lba_pages, 20_000, p_hot=0.9, frac_hot=0.2)
+        specs = [
+            DriveSpec(M.wolf(), (phase,), seed=7, name="greedy"),
+            DriveSpec(M.wolf_wear(), (phase,), seed=7, name="wear"),
+        ]
+        fleet = simulate_fleet(GEOM, specs, sampler="numpy")
+        var = fleet.wear_variance()
+        assert var[1] < var[0] / 2.0, var
+        imb = fleet.wear_imbalance()
+        assert imb[1] < imb[0], imb
+        # leveling must not be free lunch accounting: both drives did work
+        assert np.all(fleet.wa_total >= 1.0)
+
+    def test_wear_analytics_formulas(self):
+        ec = jnp.asarray([4, 6, 2, 8], jnp.int32)
+        var = wear_variance(jnp.sum(ec), jnp.sum(ec * ec), 4)
+        assert float(var) == pytest.approx(np.var([4, 6, 2, 8]))
+        imb = wear_imbalance(ec)
+        assert float(imb) == pytest.approx(8 / 5)
+        # zero-erase drive: imbalance degenerates to level (1.0)
+        assert float(wear_imbalance(jnp.zeros(4, jnp.int32))) == 1.0
+        host = lifetime_host_writes(
+            n_blocks=4, pages_per_block=8, pe_cycles=1000.0,
+            wa=jnp.asarray(2.0), imbalance=imb,
+        )
+        assert float(host) == pytest.approx(4 * 8 * 1000 / (2.0 * 8 / 5))
+        dwpd = dwpd_from_lifetime(host, lba_pages=16, years=1.0)
+        assert float(dwpd) == pytest.approx(float(host) / (16 * 365.0))
