@@ -1,38 +1,48 @@
-"""Fleet throughput: one jitted vmap(lax.scan) over a policy × workload grid
-vs a Python loop of per-drive ``managers.simulate`` on the same grid.
+"""Fleet throughput: the shard_map drive-axis fleet over a policy × workload
+grid vs a Python loop of per-drive ``managers.simulate`` on the same grid.
 
 Reports drives/sec for both paths (post-warmup, i.e. compile excluded for
-both), the speedup, and the per-drive equilibrium WA curves of the grid —
-the batched analogue of the paper's §6 policy comparisons.
+both), the speedup, the per-drive equilibrium WA curves of the grid — the
+batched analogue of the paper's §6 policy comparisons — and a 1→N
+device-count scaling curve for the mesh executor (the batched path at 1, 2
+and every visible device; on CPU the devices are virtual cores, on an
+accelerator they are chips — same code, same numbers expected to be
+bit-identical, only wall-clock moves).
 
 The speedup is hardware-dependent: XLA:CPU executes batched gather/scatter
-serially per lane, so on CPU the vmap win comes from pmap sharding across
-cores (virtual host devices, set up below) and dispatch amortization; on an
-accelerator backend the same code batches the lanes in silicon.
+serially per lane, so on CPU the vmap win comes from shard_map sharding
+across cores (virtual host devices, set up below) and dispatch
+amortization; on an accelerator backend the same code batches the lanes in
+silicon. (The executor is ``jit(shard_map(vmap))`` over
+``launch.mesh.drive_mesh`` — the old pmap path is gone; see
+core/fleet_exec.py.)
 
 Every run emits ``BENCH_fleet.json`` at the repo root (schema
-``bench_fleet/v2``): steps/sec for the batched fleet and per policy ×
-workload cell (loop path) plus host/JAX metadata (platform, python, jax
-version, backend, device count) so PR-over-PR comparisons are pinned to a
-host. ``--smoke`` runs a reduced grid for the CI lane
-(``scripts/run_tests.sh --bench-smoke``); ``--out PATH`` redirects the
-JSON (used by ``--bench-compare`` to diff a fresh run against the
-committed baseline without clobbering it); ``--only SUBSTR`` restricts
-the grid to matching cells (the ``--trim-smoke`` lane benches just the
-``tpcc_churn`` op-stream cells that way).
+``bench_fleet/v3``): steps/sec for the batched fleet, per policy × workload
+cell (loop path), the ``scaling`` curve per device count, plus host/JAX
+metadata (platform, python, jax version, backend, device count) so
+PR-over-PR comparisons are pinned to a host AND a backend — the trajectory
+is multi-backend from v3 on. ``--smoke`` runs a reduced grid for the CI
+lane (``scripts/run_tests.sh --bench-smoke``); ``--out PATH`` redirects
+the JSON (used by ``--bench-compare`` to diff a fresh run against the
+committed baseline without clobbering it); ``--only SUBSTR`` restricts the
+grid to matching cells (the ``--trim-smoke`` lane benches just the
+``tpcc_churn`` op-stream cells that way); ``--devices D`` pins the fleet
+to D devices (the ``--mesh-smoke`` lane benches one 2-device cell that
+way). The scaling sweep runs only on full-grid, unpinned runs.
 """
 
 from __future__ import annotations
 
 import os
 
-# must be set before jax imports: expose every core as a host device so the
-# fleet can pmap-shard its sub-batches
-if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={os.cpu_count()}"
-    )
+from repro.utils.hostdev import force_host_device_count
+
+# must run before jax initializes: expose the cores as host devices so the
+# fleet can shard_map its sub-batches (min 2 so the scaling curve always
+# has a multi-device point, even on a 1-core container — virtual devices
+# oversubscribe threads; structure stays, speedup needs real cores)
+force_host_device_count(max(os.cpu_count() or 1, 2))
 # the legacy XLA:CPU runtime dispatches the write-step's many tiny
 # gather/scatter ops ~2.5× faster than the thunk runtime on this workload
 # (measured: 40k → 99k fleet steps/s on the default grid); numerics are
@@ -94,7 +104,14 @@ def grid_specs(geom: Geometry, writes: int, seeds=(0,),
 
 
 def run(full: bool = False, smoke: bool = False,
-        out_path: str | None = None, only: str | None = None) -> dict:
+        out_path: str | None = None, only: str | None = None,
+        devices: int | None = None) -> dict:
+    # compile-once within this run comes from the in-process runner memo
+    # (fleet_exec); the on-disk compilation cache is NOT enabled here —
+    # set REPRO_JAX_CACHE_DIR to opt in (simulate_fleet wires it), but
+    # see the hazard note on enable_persistent_compilation_cache first:
+    # on jaxlib 0.4.37/XLA:CPU, serializing the Pallas-bearing step
+    # executables corrupts the heap and kills the bench mid-grid
     geom = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8)
     writes = 60_000 if full else (4_000 if smoke else 20_000)
     seeds = (0,) if smoke else (0, 1)  # 5 policies × 5 workloads × seeds
@@ -105,7 +122,10 @@ def run(full: bool = False, smoke: bool = False,
     # so a stride of writes//40 loses nothing while cutting the per-step
     # trace stores from the hot scan (engine default stays dense)
     trace_every = max(writes // 40, 1)
-    fleet_kw = dict(sampler="jax", devices="auto", trace_every=trace_every)
+    fleet_kw = dict(
+        sampler="jax", devices=devices if devices else "auto",
+        trace_every=trace_every,
+    )
     simulate_fleet(geom, specs, **fleet_kw)
     # best of 3: the whole-grid call is sub-10s post-refactor, so a single
     # sample is at the mercy of host scheduling noise
@@ -144,6 +164,37 @@ def run(full: bool = False, smoke: bool = False,
     loop_dps = b / t_loop.dt
     speedup = fleet_dps / loop_dps
 
+    # -- device-count scaling curve (1 → 2 → N): the mesh executor's
+    # multi-backend trajectory. Results are bit-identical per drive at
+    # every point (tests/test_fleet_mesh.py), so only wall-clock moves; on
+    # a CPU with virtual devices the curve is flat-to-worse (threads
+    # oversubscribe cores) but the per-backend shape is exactly what the
+    # trajectory tracks. Skipped on pinned-device or filtered runs (quick
+    # CI cells).
+    import jax
+
+    scaling = {}
+    if devices is None and only is None:
+        n_host = len(jax.devices())
+        for d in sorted({1, 2, n_host}):
+            kw = dict(fleet_kw, devices=d)
+            simulate_fleet(geom, specs, **kw)  # warm (compile excluded)
+            d_sec = None
+            for _ in range(2):
+                with timer() as t_d:
+                    simulate_fleet(geom, specs, **kw)
+                d_sec = t_d.dt if d_sec is None else min(d_sec, t_d.dt)
+            scaling[str(d)] = {
+                "devices": d,
+                "sec": round(d_sec, 3),
+                "fleet_steps_per_sec": round(b * writes / d_sec, 1),
+            }
+        base_sps = scaling["1"]["fleet_steps_per_sec"]
+        for cell in scaling.values():
+            cell["speedup_vs_1dev"] = round(
+                cell["fleet_steps_per_sec"] / base_sps, 3
+            )
+
     window = max(writes // 10, 500)
     # endurance columns ride on the carried O(1) aggregates — no extra
     # simulation work, just a read-off per drive
@@ -176,7 +227,8 @@ def run(full: bool = False, smoke: bool = False,
     summary = {
         "drives": b,
         "writes_per_drive": writes,
-        "host_devices": os.cpu_count(),
+        "host_devices": len(jax.devices()),
+        "fleet_devices": fleet.devices_used,
         "fleet_sec": round(fleet_sec, 3),
         "loop_sec": round(t_loop.dt, 3),
         "fleet_drives_per_sec": round(fleet_dps, 3),
@@ -195,13 +247,12 @@ def run(full: bool = False, smoke: bool = False,
     }
     report("fleet", out)
 
-    import jax
-
     # machine-readable perf trajectory, tracked PR-over-PR; host/JAX
-    # metadata pins WHERE the numbers were taken so bench-compare across
-    # hosts is recognizable as apples-to-oranges
+    # metadata pins WHERE the numbers were taken (host AND backend — the
+    # scaling curve makes the trajectory multi-backend) so bench-compare
+    # across hosts is recognizable as apples-to-oranges
     bench = {
-        "schema": "bench_fleet/v2",
+        "schema": "bench_fleet/v3",
         "mode": "smoke" if smoke else ("full" if full else "default"),
         "host": {
             "platform": platform.platform(),
@@ -220,11 +271,15 @@ def run(full: bool = False, smoke: bool = False,
                 "pages_per_block": geom.pages_per_block,
                 "lba_pba": geom.lba_pba,
             },
-            "host_devices": os.cpu_count(),
+            "host_devices": len(jax.devices()),
+            "fleet_devices": fleet.devices_used,
         },
         "fleet_steps_per_sec": summary["fleet_steps_per_sec"],
         "loop_steps_per_sec": summary["loop_steps_per_sec"],
         "speedup": summary["speedup"],
+        # per-device-count batched-fleet throughput (empty on pinned or
+        # --only runs); bench_compare diffs cells with matching counts
+        "scaling": scaling,
         "cells": {
             name: {
                 "steps_per_sec_loop": round(c["n"] * writes / c["sec"], 1),
@@ -262,5 +317,8 @@ if __name__ == "__main__":
     only = None
     if "--only" in sys.argv:  # cell filter, e.g. --only tpcc_churn
         only = sys.argv[sys.argv.index("--only") + 1]
+    devices = None
+    if "--devices" in sys.argv:  # pin the fleet's device count (mesh lane)
+        devices = int(sys.argv[sys.argv.index("--devices") + 1])
     run(full="--full" in sys.argv, smoke="--smoke" in sys.argv,
-        out_path=out, only=only)
+        out_path=out, only=only, devices=devices)

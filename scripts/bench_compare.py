@@ -3,12 +3,18 @@
     python scripts/bench_compare.py BASELINE.json FRESH.json [--tol 0.25]
 
 Fails (exit 1) when the fresh run regresses by more than ``tol`` in any
-policy×workload cell's loop throughput or in the batched fleet throughput.
-WA columns are reported for context but never gate: they are workload
-statistics, not performance. Cells present on only one side are reported
-and skipped. A baseline taken on a different host/backend (the ``host``
-block, schema v2) downgrades the run to report-only — cross-host
-throughput diffs are apples to oranges.
+policy×workload cell's loop throughput, in the batched fleet throughput,
+or in any device-count cell of the mesh scaling curve (schema v3) whose
+device count exists on both sides. WA columns are reported for context but
+never gate: they are workload statistics, not performance. Cells present
+on only one side are reported and skipped. A baseline taken on a different
+host/backend (the ``host`` block) downgrades the run to report-only —
+cross-host throughput diffs are apples to oranges; a baseline differing
+ONLY in device count (same machine, different
+``--xla_force_host_platform_device_count``) is likewise report-only, since
+per-cell throughput scales with the mesh, but is called out as such —
+the scaling curve is the place where device counts are compared
+like-for-like.
 """
 
 from __future__ import annotations
@@ -22,11 +28,23 @@ def compare(base: dict, fresh: dict, tol: float) -> int:
     b_host = base.get("host")
     f_host = fresh.get("host")
     if b_host != f_host:
-        print(
-            "NOTE: baseline host metadata differs from this host — "
-            "reporting only, not gating."
-        )
-        print(f"  baseline: {b_host}\n  fresh:    {f_host}")
+        strip = lambda h: {k: v for k, v in (h or {}).items()
+                           if k != "devices"}
+        if strip(b_host) == strip(f_host):
+            print(
+                "NOTE: device-count mismatch — baseline ran on "
+                f"{(b_host or {}).get('devices')} device(s), this run on "
+                f"{(f_host or {}).get('devices')} (same host otherwise). "
+                "Per-cell throughput scales with the mesh, so reporting "
+                "only, not gating; matching device counts in the scaling "
+                "curve still diff like-for-like below."
+            )
+        else:
+            print(
+                "NOTE: baseline host metadata differs from this host — "
+                "reporting only, not gating."
+            )
+            print(f"  baseline: {b_host}\n  fresh:    {f_host}")
         gate = False
     if base.get("mode") != fresh.get("mode"):
         print(
@@ -93,6 +111,38 @@ def compare(base: dict, fresh: dict, tol: float) -> int:
             flag = f"REGRESSION ({ratio:.2f}x)"
             failures.append(f"fleet: {old_f:.0f} → {new_f:.0f} steps/s")
         rows.append(("<batched fleet>", f"{old_f:.0f}", f"{new_f:.0f}", flag))
+
+    # mesh scaling curve (schema v3): per-device-count batched throughput.
+    # Device counts are the cell keys, so a curve taken at a different
+    # mesh width shows up as one-sided cells (report-only) instead of
+    # poisoning the gate; matching counts gate like any other cell.
+    b_sc, f_sc = base.get("scaling", {}), fresh.get("scaling", {})
+    for d in sorted(set(b_sc) | set(f_sc), key=int):
+        name = f"<scaling {d} dev>"
+        if d not in b_sc or d not in f_sc:
+            side = "baseline" if d in b_sc else "fresh"
+            rows.append((name, "—", "—", f"only in {side} run (not gated)"))
+            one_sided += 1
+            continue
+        old = b_sc[d].get("fleet_steps_per_sec")
+        new = f_sc[d].get("fleet_steps_per_sec")
+        if old is None or new is None:
+            rows.append((name, "—", "—", "no throughput field (not gated)"))
+            continue
+        ratio = new / old if old else float("inf")
+        flag = ""
+        too_fast = min(
+            b_sc[d].get("sec", min_sec), f_sc[d].get("sec", min_sec)
+        ) < min_sec
+        if ratio < 1.0 - tol:
+            if too_fast:
+                flag = f"ratio {ratio:.2f}x (<{min_sec}s sample, not gated)"
+            else:
+                flag = f"REGRESSION ({ratio:.2f}x)"
+                failures.append(
+                    f"scaling@{d}dev: {old:.0f} → {new:.0f} steps/s"
+                )
+        rows.append((name, f"{old:.0f}", f"{new:.0f}", flag))
 
     if not rows:
         print("no cells on either side — nothing to compare")

@@ -4,14 +4,11 @@ Times simulate_fleet on the bench grid under knob variants. Usage:
     PYTHONPATH=src:. python scripts/perf_probe.py [writes] [variant ...]
 """
 
-import os
 import sys
 
-if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={os.cpu_count()}"
-    )
+from repro.utils.hostdev import force_host_device_count
+
+force_host_device_count()  # before jax init (see repro.utils.hostdev)
 
 import time
 

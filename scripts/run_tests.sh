@@ -10,6 +10,9 @@
 #   scripts/run_tests.sh --wear-smoke   # wear/endurance lane: the scoring-equivalence
 #                                       # + erase-accounting tests marked `wear`, plus
 #                                       # one wear-leveling bench cell (wolf-wear)
+#   scripts/run_tests.sh --mesh-smoke   # mesh executor lane: the multi-device
+#                                       # shard_map equivalence tests marked `mesh`,
+#                                       # plus one 2-device bench cell
 #   scripts/run_tests.sh --bench-smoke  # reduced fleet benchmark → BENCH_fleet.json
 #   scripts/run_tests.sh --bench-compare  # fresh smoke run diffed against the
 #                                         # committed BENCH_fleet.json; fails on
@@ -50,6 +53,29 @@ if [[ "${1:-}" == "--trim-smoke" ]]; then
     exit 0
 fi
 
+mesh_bench_cell() {
+    # one 2-device mesh bench cell: a single policy column of the smoke
+    # grid pinned to 2 devices (scratch output — baselines stay untouched);
+    # exercises the shard_map executor end-to-end incl. ragged padding
+    export PYTHONPATH=".:${PYTHONPATH}"
+    local scratch status=0
+    scratch="$(mktemp /tmp/bench_mesh.XXXXXX.json)"
+    python benchmarks/bench_fleet.py --smoke --devices 2 --only wolf/uniform \
+        --out "$scratch" || status=$?
+    rm -f "$scratch"
+    return "$status"
+}
+
+if [[ "${1:-}" == "--mesh-smoke" ]]; then
+    # focused mesh lane: every test marked `mesh` (≥2-device shard_map
+    # equivalence, ragged-sub-batch padding, compiled-step cache hits),
+    # then one 2-device bench cell. The default --fast lane subsumes this:
+    # the `mesh` tests are not `slow`, and --fast appends the same cell.
+    python -m pytest -q -m mesh
+    mesh_bench_cell
+    exit 0
+fi
+
 if [[ "${1:-}" == "--wear-smoke" ]]; then
     # focused wear/endurance lane: every test marked `wear` (victim-scoring
     # equivalence oracles, erase-accounting conservation, wear analytics,
@@ -84,10 +110,12 @@ fi
 
 if [[ "${1:-}" == "--fast" ]]; then
     shift
-    # the trim-smoke tests ride along here (-m "not slow" includes every
-    # `trim`-marked test); the lane's bench cell runs after the suite
+    # the trim-smoke and mesh-smoke tests ride along here (-m "not slow"
+    # includes every `trim`- and `mesh`-marked test); the lanes' bench
+    # cells run after the suite
     python -m pytest -q -m "not slow" "$@"
     trim_bench_cell
+    mesh_bench_cell
     exit 0
 fi
 exec python -m pytest -q "$@"

@@ -1,4 +1,5 @@
-"""Fleet-scale batched SSD simulation: B drives in one jitted vmap(lax.scan).
+"""Fleet-scale batched SSD simulation: B drives in one jitted vmap(lax.scan),
+shard_mapped over a 1-D drive-axis device mesh.
 
 Where ``managers.simulate`` runs ONE drive per Python call, a fleet stacks
 the per-drive state pytrees and runs every drive lock-step through the same
@@ -11,19 +12,42 @@ into one ``vmap``. This is the substrate for exploring policy × workload grids
 on device by ``workloads.sample_phases_device`` inside the jitted region, so
 host work is O(B) setup, not O(B·T) sampling.
 
-Two execution details that matter on real hardware:
+Execution architecture (core/fleet_exec.py owns the device side):
 
-* Drives are partitioned into sub-batches by step STRUCTURE — the
-  (bloom detector, can-demote, movement-ops) key of :func:`_part_key`:
-  a vmapped ``lax.cond`` lowers to a select over both branches, so any
-  machinery one drive of a sub-batch carries is machinery every drive of
-  that sub-batch executes per step. Partitioning keeps the (G × bits)
-  bloom filter pair, the §5.6 GC-demotion scan, and the movement-op
-  second drain out of the compiled step of drives that can never use them.
-* ``devices=`` shards each sub-batch across the host's JAX devices with
-  ``pmap(vmap(...))`` — on CPU, spawn virtual devices via
-  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* importing
-  jax (see benchmarks/bench_fleet.py) to use every core.
+* **Partitioning** — drives are split into sub-batches by step STRUCTURE,
+  the :func:`_part_key` of (detector, movement ops, dynamic groups,
+  closed-form allocation, op stream): a vmapped ``lax.cond`` lowers to a
+  select over both branches, so any machinery one drive of a sub-batch
+  carries is machinery every drive of that sub-batch executes per step.
+  Partitioning keeps the (G × bits) bloom filter pair, the §5.6
+  GC-demotion scan, and the movement-op second drain out of the compiled
+  step of drives that can never use them.
+* **Sharding** — ``devices=`` runs each sub-batch as
+  ``jit(shard_map(vmap(scan)))`` over the ``"drives"`` axis of
+  :func:`repro.launch.mesh.drive_mesh`; each device scans its slice of the
+  batch, bit-identical to the single-device vmap (no cross-drive ops, no
+  collectives). A ragged sub-batch (size not a multiple of the device
+  count) is padded with inert filler drives and the filler rows are
+  dropped from every result: per-device wall-clock is ceil(B/n_dev) drive
+  scans either way, so the pad only fills otherwise-idle lanes — padding
+  is free, which is why it replaced the old divisor clamp that silently
+  collapsed ragged sub-batches to 1 device. (The ``pmap(vmap(...))``
+  executor this supersedes is fully removed: shard_map composes with jit —
+  one dispatch, donated state buffers, one compilation cache.)
+* **Pipelining** — sub-batches are DISPATCHED in one pass and RESOLVED in a
+  second: jax dispatch is asynchronous, so while sub-batch k executes on
+  the devices the host is already building (``build_drive``, stacking,
+  padding) sub-batch k+1. Host-side construction overlaps device
+  execution instead of serializing with it, which is where the old
+  executor spent its host time on large grids.
+* **Compile amortization** — per-sub-batch runners are memoized on
+  (step structure × geometry × scan length × device count), with optional
+  on-disk persistence (``fleet_exec.enable_persistent_compilation_cache``),
+  so sweeps that revisit a structure compile once. On CPU, spawn virtual
+  devices via :func:`repro.utils.hostdev.force_host_device_count` *before*
+  the first jax import — the device count is locked at backend init (that
+  is also why ``devices="auto"`` from a jax-already-imported entry point
+  warns instead of silently running on 1 device).
 
 Geometry is shared at the SHAPE level (array sizes: blocks, pages/block,
 logical span, group slots); within that shape, drives vary utilization and
@@ -40,21 +64,22 @@ Frankie-style effective-OP analytics.
 from __future__ import annotations
 
 import dataclasses
-import functools
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.managers import RunResult, build_drive
-from repro.core.simulator import (
-    SimContext,
-    make_step,
-    policy_from_config,
-    scan_writes,
+from repro.core.fleet_exec import (
+    enable_persistent_compilation_cache,
+    pad_batch,
+    resolve_devices,
+    subbatch_runner,
 )
+from repro.core.managers import RunResult, build_drive
+from repro.core.simulator import SimContext, policy_from_config
 from repro.core.ssd import Geometry, ManagerConfig, SimState
-from repro.core.workloads import Phase, phase_param_arrays, sample_phases_device
+from repro.core.workloads import Phase, phase_param_arrays
 
 # ManagerConfig fields that must agree fleet-wide: they are baked into the
 # shared static SimContext (paper constants), not per-drive policy data.
@@ -91,6 +116,18 @@ class FleetResult:
     lbas: np.ndarray | None = None  # [B, T] when return_lbas=True
     geom: Geometry | None = None  # shared fleet geometry (analytics)
     trace_every: int = 1  # trace stride (RunResult.stride of every drive)
+    # per-sub-batch executor report, aligned with .shards: drive count,
+    # devices actually used, and filler-drive padding. With mesh padding a
+    # ragged sub-batch always uses every requested device (devices ==
+    # min(requested, len(jax.devices()))) — this is the visible record of
+    # the effective shard count the old divisor clamp used to hide.
+    exec_meta: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def devices_used(self) -> int:
+        """Device count the fleet actually sharded over (max across
+        sub-batches; 1 = pure single-device vmap)."""
+        return max((m["devices"] for m in self.exec_meta), default=1)
 
     def state(self, i: int) -> SimState:
         """Final state pytree of drive i."""
@@ -276,58 +313,6 @@ def _part_key(s: DriveSpec) -> tuple[str, bool, bool, bool, bool]:
     )
 
 
-@functools.lru_cache(maxsize=64)
-def _shard_runner(ctx: SimContext, n_total: int, on_device_sampler: bool,
-                  n_dev: int):
-    """Compiled runner for one sub-batch: vmap within a device shard,
-    pmap across shards when n_dev > 1."""
-
-    def run_one(st, stream, params, page_rate, page_group0, policy):
-        ops = None
-        if on_device_sampler:
-            if ctx.with_trim:
-                ops, lbas = sample_phases_device(
-                    stream, params, n_total, with_ops=True
-                )
-            else:
-                lbas = sample_phases_device(stream, params, n_total)
-        elif ctx.with_trim:
-            ops, lbas = stream
-        else:
-            lbas = stream
-        cum = jnp.cumsum(params["counts"])
-
-        def rate_fn(s, lba, t):
-            # t is the shared EVENT clock (== write clock for pure-write
-            # sub-batches); phase boundaries are event counts either way
-            ph = jnp.minimum(
-                jnp.searchsorted(cum, t, side="right"), cum.shape[0] - 1
-            )
-            return page_rate[ph, lba]
-
-        step = make_step(ctx, policy, rate_fn, page_group0)
-        ts = jnp.arange(n_total, dtype=jnp.int32)
-        st, trace = scan_writes(ctx, step, st, lbas, ts, ops)
-        return st, trace, lbas
-
-    batched = jax.vmap(run_one)
-    if n_dev > 1:
-        return jax.pmap(batched)
-    return jax.jit(batched)
-
-
-def _reshape_shard(tree, n_dev):
-    return jax.tree_util.tree_map(
-        lambda a: a.reshape((n_dev, a.shape[0] // n_dev) + a.shape[1:]), tree
-    )
-
-
-def _flatten_shard(tree):
-    return jax.tree_util.tree_map(
-        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), tree
-    )
-
-
 def simulate_fleet(
     geom: Geometry,
     specs: list[DriveSpec],
@@ -357,8 +342,15 @@ def simulate_fleet(
     phases, the bit-compatibility anchor of tests/test_write_engine.py.
 
     devices: None/1 = pure single-device vmap; "auto" = shard over all
-    jax.devices(); int = shard over that many. Shard count is clamped to a
-    divisor of each sub-batch size.
+    jax.devices(); int = shard over that many (clamped to the visible
+    device count). Every sub-batch — ragged or not — uses the full
+    resolved device count: ragged sub-batches are padded with inert
+    filler drives (free: the pad fills otherwise-idle lanes) and the
+    filler rows never surface in results. ``FleetResult.exec_meta``
+    records drives/devices/padding per sub-batch. Results are
+    bit-identical across device counts. NOTE: on CPU the visible device
+    count is locked at jax backend init — see
+    ``repro.utils.hostdev.force_host_device_count``.
 
     gc_impl: GC drain implementation ("bulk" | "reference"), threaded to
     SimContext — the bulk-vs-reference equivalence suite runs whole fleets
@@ -394,12 +386,12 @@ def simulate_fleet(
                 f"fleet drives must share ManagerConfig.{f} "
                 "(a static paper constant)"
             )
-    if devices in (None, 1):
-        n_dev = 1
-    elif devices == "auto":
-        n_dev = len(jax.devices())
-    else:
-        n_dev = max(1, min(int(devices), len(jax.devices())))
+    # on-disk compile cache: strictly opt-in via env — see the hazard
+    # note on enable_persistent_compilation_cache (jaxlib 0.4.37/XLA:CPU
+    # heap corruption when serializing the Pallas-bearing executables)
+    if os.environ.get("REPRO_JAX_CACHE_DIR"):
+        enable_persistent_compilation_cache()
+    n_dev = resolve_devices(devices)
     p_max = max(len(s.phases) for s in specs)
     g_wl = max(len(ph.sizes) for s in specs for ph in s.phases)
 
@@ -419,7 +411,7 @@ def simulate_fleet(
     app = np.zeros((len(specs), n_trace), np.int32)
     mig = np.zeros((len(specs), n_trace), np.int32)
     lbas_out = np.zeros((len(specs), n_total), np.int32) if return_lbas else None
-    shards = []
+    shards, pending, exec_meta = [], [], []
     for key, idx in partitions:
         td_mode, use_movement, use_dynamic, use_closed, with_trim = key
         use_bloom = td_mode == "bloom"
@@ -529,24 +521,35 @@ def simulate_fleet(
             jnp.asarray(np.stack(page_groups)),
             _stack(policies),
         )
-        d = n_dev
-        while len(sub) % d:
-            d -= 1  # largest shard count dividing the sub-batch
-        runner = _shard_runner(ctx, n_total, sampler == "jax", d)
-        if d > 1:
-            args = tuple(_reshape_shard(a, d) for a in args)
-        st_f, trace, lbas = runner(*args)
-        if d > 1:
-            st_f, trace, lbas = (
-                _flatten_shard(st_f), _flatten_shard(trace),
-                _flatten_shard(lbas),
-            )
-        app[idx], mig[idx] = np.asarray(trace[0]), np.asarray(trace[1])
+        # mesh dispatch: every sub-batch uses the full resolved device
+        # count; raggedness is absorbed by inert filler drives (per-device
+        # wall-clock is ceil(B/d) scans with or without the pad). Dispatch
+        # is async — the runner call returns once enqueued, so the next
+        # iteration's host-side build_drive/stacking overlaps this
+        # sub-batch's device execution (the pipeline).
+        d = min(n_dev, len(sub))
+        pad = (-len(sub)) % d
+        if pad:
+            args = pad_batch(args, pad)
+        runner = subbatch_runner(ctx, n_total, sampler == "jax", d)
+        pending.append((idx, runner(*args), pad))
+        exec_meta.append({"drives": len(sub), "devices": d, "padding": pad})
+
+    # resolve pass: block on each sub-batch's outputs (host↔device transfer
+    # happens here, after every sub-batch has been enqueued) and strip the
+    # filler rows so padding never surfaces.
+    for idx, (st_f, trace, lbas), pad in pending:
+        b = len(idx)
+        app[idx], mig[idx] = (
+            np.asarray(trace[0][:b]), np.asarray(trace[1][:b])
+        )
         if return_lbas:
-            lbas_out[idx] = np.asarray(lbas)
+            lbas_out[idx] = np.asarray(lbas[:b])
+        if pad:
+            st_f = jax.tree_util.tree_map(lambda a: a[:b], st_f)
         shards.append((idx, st_f))
 
     return FleetResult(
         app=app, mig=mig, specs=list(specs), shards=shards, lbas=lbas_out,
-        geom=geom, trace_every=trace_every,
+        geom=geom, trace_every=trace_every, exec_meta=exec_meta,
     )

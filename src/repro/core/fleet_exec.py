@@ -1,0 +1,225 @@
+"""Fleet execution backend: shard_map over a 1-D drive-axis mesh.
+
+This module owns everything between ``simulate_fleet``'s per-sub-batch
+arrays and the devices:
+
+* **Sharding** — each sub-batch runs as ``jit(shard_map(vmap(run_one)))``
+  over :func:`repro.launch.mesh.drive_mesh`'s ``"drives"`` axis. Drives are
+  independent lanes, so each device executes the plain vmapped scan over
+  its slice of the batch; numerics are bit-identical to the single-device
+  ``jit(vmap(...))`` path (which remains the ``n_dev == 1`` special case —
+  no mesh, no collective, same trace). The legacy ``pmap(vmap(...))``
+  executor is gone: shard_map composes with jit (one dispatch, donation,
+  the compilation cache) where pmap was its own retired code path.
+
+* **Padding** — a sub-batch whose size is not a multiple of the device
+  count is padded with inert filler drives (copies of the sub-batch's
+  drive 0) up to the next multiple, and the filler rows are dropped before
+  results surface. Wall-clock per device is ``ceil(B / n_dev)`` drive
+  scans, so the pad fills lanes that would otherwise sit idle — padding is
+  never slower than shrinking the shard count, which is why the old
+  "largest divisor of B" clamp (which silently collapsed ragged sub-batches
+  to 1 device) is gone.
+
+* **Donation** — the stacked drive state (the dominant buffer,
+  O(fleet size) many block/page arrays) is donated into the jitted scan,
+  so the executor holds one copy per sub-batch in flight instead of
+  input + output: peak state memory stays O(B/n_dev) per device. On
+  backends without input-output aliasing (older XLA:CPU) donation is a
+  silent no-op — correctness is unaffected either way because callers
+  never reuse the stacked input.
+
+* **Compiled-step cache** — runners are memoized on
+  ``(SimContext, scan length, sampler kind, n_dev)``. The SimContext of a
+  sub-batch is a pure function of its ``_part_key`` (plus geometry and the
+  fleet-shared constants), so sweep grids that revisit a step structure —
+  e.g. the same policy grid at a new seed set, or bench scaling curves —
+  reuse the jitted runner and pay XLA compilation once per structure.
+  :func:`step_cache_stats` exposes hit/miss counters (asserted by
+  tests/test_fleet_mesh.py); :func:`enable_persistent_compilation_cache`
+  additionally wires jax's on-disk compilation cache so the once-per-
+  structure cost survives process restarts. The on-disk layer is STRICTLY
+  opt-in (set ``REPRO_JAX_CACHE_DIR`` or call it explicitly) and carries a
+  hazard note — see the function docstring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
+from repro.core.simulator import SimContext, make_step, scan_writes
+from repro.core.workloads import sample_phases_device
+from repro.launch.mesh import drive_mesh
+from repro.utils.hostdev import host_device_flag
+
+
+def resolve_devices(devices: int | str | None) -> int:
+    """Resolve ``simulate_fleet``'s ``devices=`` argument to a device count.
+
+    None/1 = single device; ``"auto"`` = every visible jax device; an int
+    (or numeric string) is clamped to the visible device count. On CPU the
+    visible count is an IMPORT-ORDER property — jax locks it at first
+    backend init, so ``"auto"`` from an entry point that imported jax
+    before setting ``--xla_force_host_platform_device_count`` sees 1
+    device. Call :func:`repro.utils.hostdev.force_host_device_count`
+    before the first jax import; this resolver warns about the trap rather
+    than silently degrading.
+    """
+    if devices in (None, 1):
+        return 1
+    n_avail = len(jax.devices())
+    if devices == "auto":
+        if n_avail == 1 and jax.default_backend() == "cpu" \
+                and host_device_flag() is None:
+            warnings.warn(
+                'devices="auto" sees a single CPU device: jax was '
+                "initialized before --xla_force_host_platform_device_count "
+                "was set. Call repro.utils.hostdev.force_host_device_count "
+                "before the first jax import to shard across cores.",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        return n_avail
+    return max(1, min(int(devices), n_avail))
+
+
+def pad_batch(tree, pad: int):
+    """Append ``pad`` filler rows to every leaf's leading (drive) axis by
+    replicating row 0. Lanes are independent, so fillers change nothing for
+    real drives; callers drop the filler rows from every output."""
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])], axis=0
+        ),
+        tree,
+    )
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+
+_RUNNERS: dict[tuple, object] = {}
+_STATS = CacheStats()
+
+
+def step_cache_stats() -> CacheStats:
+    """In-process compiled-runner memo counters (a copy)."""
+    return dataclasses.replace(_STATS)
+
+
+def step_cache_clear() -> None:
+    """Drop the runner memo and zero the counters (tests only — the
+    underlying jax jit caches are left alone)."""
+    _RUNNERS.clear()
+    _STATS.hits = 0
+    _STATS.misses = 0
+
+
+_PERSISTENT_WIRED = False
+
+
+def enable_persistent_compilation_cache(path: str | None = None) -> str:
+    """Wire jax's on-disk compilation cache (idempotent).
+
+    The in-process memo deduplicates compiles within a run; this extends
+    the once-per-step-structure guarantee across processes — a sweep
+    driver that restarts per grid, or repeated bench runs, reload the XLA
+    executable instead of recompiling. Default location
+    ``$REPRO_JAX_CACHE_DIR`` or ``~/.cache/repro_jax_cache``.
+
+    .. warning::
+        Opt-in for a reason: on jaxlib 0.4.37's XLA:CPU backend,
+        serializing the Pallas-kernel-bearing step executables corrupts
+        the process heap — after roughly a dozen cached compiles the
+        process dies with ``malloc_consolidate()`` / segfault. Bisected:
+        a plain-jax scan caches fine under the same config; any mix of
+        this module's runners and the per-drive step jits crashes once
+        enough executables are written, with or without donation and on
+        both CPU runtimes (thunk and legacy). Nothing in the repo enables
+        this by default; flip ``REPRO_JAX_CACHE_DIR`` on only on a
+        jax/jaxlib build where a full bench run survives with it set.
+    """
+    global _PERSISTENT_WIRED
+    path = path or os.environ.get(
+        "REPRO_JAX_CACHE_DIR", os.path.expanduser("~/.cache/repro_jax_cache")
+    )
+    if _PERSISTENT_WIRED:
+        return path
+    jax.config.update("jax_compilation_cache_dir", path)
+    # sim steps compile in O(seconds); cache anything non-trivial
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    _PERSISTENT_WIRED = True
+    return path
+
+
+def subbatch_runner(ctx: SimContext, n_total: int, on_device_sampler: bool,
+                    n_dev: int):
+    """Compiled runner for one sub-batch, memoized on its step structure.
+
+    The returned callable maps stacked per-drive args (leading axis B,
+    a multiple of ``n_dev``) to ``(final_state, (app, mig), lbas)``. The
+    state argument is donated. Dispatch is asynchronous: the call returns
+    as soon as the computation is enqueued, so the host can build the next
+    sub-batch while this one executes (simulate_fleet's pipeline).
+    """
+    key = (ctx, n_total, on_device_sampler, n_dev)
+    fn = _RUNNERS.get(key)
+    if fn is not None:
+        _STATS.hits += 1
+        return fn
+    _STATS.misses += 1
+
+    def run_one(st, stream, params, page_rate, page_group0, policy):
+        ops = None
+        if on_device_sampler:
+            if ctx.with_trim:
+                ops, lbas = sample_phases_device(
+                    stream, params, n_total, with_ops=True
+                )
+            else:
+                lbas = sample_phases_device(stream, params, n_total)
+        elif ctx.with_trim:
+            ops, lbas = stream
+        else:
+            lbas = stream
+        cum = jnp.cumsum(params["counts"])
+
+        def rate_fn(s, lba, t):
+            # t is the shared EVENT clock (== write clock for pure-write
+            # sub-batches); phase boundaries are event counts either way
+            ph = jnp.minimum(
+                jnp.searchsorted(cum, t, side="right"), cum.shape[0] - 1
+            )
+            return page_rate[ph, lba]
+
+        step = make_step(ctx, policy, rate_fn, page_group0)
+        ts = jnp.arange(n_total, dtype=jnp.int32)
+        st, trace = scan_writes(ctx, step, st, lbas, ts, ops)
+        return st, trace, lbas
+
+    batched = jax.vmap(run_one)
+    if n_dev > 1:
+        spec = PartitionSpec("drives")
+        # check_rep=False: the replication checker has no rule for
+        # lax.while_loop (the GC/valve drains) in this jax version; the
+        # body is collective-free with fully partitioned in/outs, so the
+        # check is vacuous here anyway.
+        batched = shard_map(
+            batched, mesh=drive_mesh(n_dev), in_specs=spec, out_specs=spec,
+            check_rep=False,
+        )
+    fn = jax.jit(batched, donate_argnums=(0,))
+    _RUNNERS[key] = fn
+    return fn

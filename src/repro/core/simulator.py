@@ -1690,7 +1690,14 @@ def scan_writes(ctx: SimContext, step, st: SimState, lbas, ts, ops=None):
     return jax.lax.scan(chunk, st, xs)
 
 
-@functools.partial(jax.jit, static_argnames=("ctx",))
+# st is DONATED: the scan's carry rewrites every state array, so aliasing
+# the input buffers halves peak state memory (the fleet executor makes the
+# same promise per shard — core/fleet_exec.py). Callers must treat the st
+# they pass in as consumed (managers.simulate threads the returned state
+# forward and never re-reads its input, the donation-safe signature every
+# entry point follows). Backends without input-output aliasing silently
+# skip donation; numerics are unaffected either way.
+@functools.partial(jax.jit, static_argnames=("ctx",), donate_argnums=(1,))
 def _run_jit(ctx: SimContext, st: SimState, lbas, page_rate, policy):
     def rate_fn(s, lba, t):
         return page_rate[lba]
@@ -1700,7 +1707,7 @@ def _run_jit(ctx: SimContext, st: SimState, lbas, page_rate, policy):
     return scan_writes(ctx, step, st, lbas, ts)
 
 
-@functools.partial(jax.jit, static_argnames=("ctx",))
+@functools.partial(jax.jit, static_argnames=("ctx",), donate_argnums=(1,))
 def _run_ops_jit(ctx: SimContext, st: SimState, ops, lbas, page_rate,
                  page_group0, policy):
     def rate_fn(s, lba, t):
@@ -1723,7 +1730,9 @@ def run(ctx: SimContext, st: SimState, lbas, *, ops=None, page_group0=None,
     CUMULATIVE counters — [T] dense, or [T // ctx.trace_every] sampled at
     every trace_every-th event) — segment the workload (e.g. at a
     frequency swap) by calling run() repeatedly with updated oracle
-    arrays.
+    arrays. ``st`` is donated into the jitted scan: treat the passed-in
+    state as consumed and read only the returned one (thread it forward
+    across segments, as managers.simulate does).
     """
     lbas = jnp.asarray(lbas, jnp.int32)
     if page_rate is None:

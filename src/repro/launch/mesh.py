@@ -28,6 +28,21 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mes
     return jax.make_mesh(shape, axes)
 
 
+def drive_mesh(n_dev: int) -> jax.sharding.Mesh:
+    """1-D fleet mesh: ``n_dev`` devices along a single ``"drives"`` axis.
+
+    The fleet executor (core/fleet_exec.py) shard_maps each sub-batch over
+    this axis — drives are embarrassingly parallel, so the 1-D mesh is the
+    whole topology story: on CPU the devices are virtual cores (see
+    repro.utils.hostdev), on an accelerator they are chips, and a multi-pod
+    fleet is just a longer axis. Kept here, beside the production meshes,
+    so every mesh the repo builds goes through one module.
+    """
+    devs = jax.devices()
+    assert 1 <= n_dev <= len(devs), (n_dev, len(devs))
+    return jax.make_mesh((n_dev,), ("drives",), devices=devs[:n_dev])
+
+
 def mesh_devices(mesh: jax.sharding.Mesh) -> int:
     n = 1
     for s in mesh.shape.values():

@@ -1,0 +1,83 @@
+"""Virtual host-device setup — the one place that may set
+``--xla_force_host_platform_device_count``.
+
+jax locks the device count at first backend initialization: once anything
+calls ``jax.devices()`` (or runs a computation), ``XLA_FLAGS`` edits are
+silently ignored. That makes "how many devices does the fleet see?" an
+IMPORT-ORDER property — any entry point that imports jax before setting the
+flag runs ``devices="auto"`` fleets on 1 device and never finds out. Every
+entry point that wants multi-device CPU sharding must therefore call
+:func:`force_host_device_count` BEFORE its first jax import (or at least
+before the first backend touch); the helper is idempotent, never overrides
+an explicit flag already in ``XLA_FLAGS``, and warns instead of lying when
+it is called too late.
+
+This module must stay import-light (no jax at module scope) so callers can
+import it first, unconditionally.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+import warnings
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def host_device_flag() -> int | None:
+    """The device count pinned in ``XLA_FLAGS``, or None if the flag is
+    absent (jax will then expose 1 CPU device)."""
+    m = re.search(rf"{_FLAG}=(\d+)", os.environ.get("XLA_FLAGS", ""))
+    return int(m.group(1)) if m else None
+
+
+def _backend_initialized() -> bool:
+    if "jax" not in sys.modules:
+        return False
+    try:
+        from jax._src import xla_bridge
+
+        return bool(xla_bridge.backends_are_initialized())
+    except Exception:  # private API moved: assume the worst (too late)
+        return True
+
+
+def force_host_device_count(n: int | None = None) -> int:
+    """Pin the CPU backend's virtual device count, exactly once.
+
+    n: device count (default ``os.cpu_count()``). Returns the count that is
+    actually in effect:
+
+    * flag already in ``XLA_FLAGS`` (set by the user or an earlier call):
+      that count wins — never overridden;
+    * jax backend already initialized: too late, the flag would be ignored —
+      warns and returns the live ``len(jax.devices())``;
+    * otherwise appends the flag to ``XLA_FLAGS`` and returns ``n``.
+
+    Virtual devices beyond the physical core count are legal (XLA threads
+    oversubscribe) — useful for exercising multi-device code paths on small
+    hosts, useless for speedup.
+    """
+    current = host_device_flag()
+    if current is not None:
+        return current
+    if _backend_initialized():
+        import jax
+
+        live = len(jax.devices())
+        if n is not None and n != live:
+            warnings.warn(
+                f"force_host_device_count({n}) called after jax backend "
+                f"initialization — the flag would be ignored; continuing "
+                f"with the live {live} device(s). Call this helper before "
+                "the first jax import (see repro.utils.hostdev).",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return live
+    n = int(n) if n else (os.cpu_count() or 1)
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}={n}".strip()
+    return n

@@ -1,4 +1,12 @@
-"""Suite-wide wiring: offline hypothesis fallback.
+"""Suite-wide wiring: virtual host devices + offline hypothesis fallback.
+
+Two virtual CPU devices are pinned BEFORE any test module can import jax
+(the count is locked at backend init — see repro.utils.hostdev), so the
+`mesh`-marked multi-device fleet tests (tests/test_fleet_mesh.py) always
+have a real 2-device mesh to shard over; an explicit
+``--xla_force_host_platform_device_count`` already in ``XLA_FLAGS`` wins.
+Single-device tests are unaffected: computations run on device 0 unless
+explicitly sharded.
 
 The container has no network access; when the real ``hypothesis`` package is
 absent, install the deterministic shim from ``_hypothesis_compat`` before
@@ -9,6 +17,10 @@ import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+from repro.utils.hostdev import force_host_device_count  # noqa: E402
+
+force_host_device_count(2)
 
 try:
     import hypothesis  # noqa: F401  (prefer the real package)

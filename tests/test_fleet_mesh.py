@@ -1,0 +1,131 @@
+"""Multi-device fleet executor tests (the `mesh` lane).
+
+The shard_map drive-axis executor must be a pure scheduling change: a fleet
+sharded over ≥2 devices is bit-identical (traces, final states, WA curves)
+to the single-device vmap path, ragged sub-batches use every requested
+device via inert filler padding, and revisiting a step structure hits the
+compiled-runner memo instead of recompiling. tests/conftest.py pins 2
+virtual CPU devices before jax initializes, so these run everywhere.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import fleet_exec as FX
+from repro.core import managers as M
+from repro.core import workloads as W
+from repro.core.fleet import DriveSpec, simulate_fleet
+from repro.core.ssd import Geometry
+
+GEOM = Geometry(n_luns=4, blocks_per_lun=32, pages_per_block=8, lba_pba=0.7)
+N_WRITES = 4_000
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs ≥2 jax devices (tests/conftest.py pins 2 on CPU)",
+)
+
+
+def _mixed_specs(lba, n):
+    """Mixed managers × workloads chosen to exercise every padding case on
+    a 2-device mesh: the wolf-structure sub-batch has 3 drives (ragged —
+    pad 1), the single-group and trim sub-batches have 1 drive each
+    (smaller than the mesh — pad up to it)."""
+    return [
+        DriveSpec(M.wolf(), (W.two_modal(lba, n),), seed=1),
+        DriveSpec(M.wolf(), (W.uniform(lba, n),), seed=2),
+        DriveSpec(M.wolf_lru(), (W.tpcc_like(lba, n),), seed=3),
+        DriveSpec(M.single_group(), (W.uniform(lba, n),), seed=4),
+        # op-stream (TRIM) sub-batch: WRITE/TRIM dispatch step under shard_map
+        DriveSpec(M.wolf(), (W.tpcc_churn(lba, n),), seed=5),
+    ]
+
+
+@pytest.mark.mesh
+@needs_mesh
+class TestMeshEquivalence:
+    @pytest.fixture(scope="class")
+    def fleets(self):
+        specs = _mixed_specs(GEOM.lba_pages, N_WRITES)
+        one = simulate_fleet(GEOM, specs, sampler="numpy", devices=None)
+        two = simulate_fleet(GEOM, specs, sampler="numpy", devices=2)
+        return specs, one, two
+
+    def test_traces_bit_identical(self, fleets):
+        specs, one, two = fleets
+        np.testing.assert_array_equal(one.app, two.app)
+        np.testing.assert_array_equal(one.mig, two.mig)
+
+    def test_final_states_bit_identical(self, fleets):
+        specs, one, two = fleets
+        for i, s in enumerate(specs):
+            st1, st2 = one.state(i), two.state(i)
+            for key, a in st1.items():
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(st2[key]),
+                    err_msg=f"{s.label}: state[{key}] diverged across meshes",
+                )
+
+    def test_wa_curves_bit_identical(self, fleets):
+        _, one, two = fleets
+        np.testing.assert_array_equal(
+            one.wa_curves(window=1000), two.wa_curves(window=1000)
+        )
+
+    def test_ragged_subbatches_use_all_devices(self, fleets):
+        _, one, two = fleets
+        # single-device path: everything on 1 device, no padding
+        assert one.devices_used == 1
+        assert all(m["padding"] == 0 for m in one.exec_meta)
+        # mesh path: every sub-batch shards over min(2, drives) devices —
+        # the old divisor clamp would have collapsed the ragged 3-drive
+        # sub-batch to 1 device
+        assert two.devices_used == 2
+        by_drives = {m["drives"]: m for m in two.exec_meta}
+        assert by_drives[3]["devices"] == 2 and by_drives[3]["padding"] == 1
+        assert all(
+            m["devices"] == min(2, m["drives"]) for m in two.exec_meta
+        )
+
+    def test_device_sampler_bit_identical_across_meshes(self):
+        # streams are keyed by seed alone, so the on-device sampler must
+        # also be invariant to the mesh layout
+        lba = GEOM.lba_pages
+        specs = [
+            DriveSpec(M.wolf(), (W.two_modal(lba, N_WRITES),), seed=7),
+            DriveSpec(M.wolf(), (W.uniform(lba, N_WRITES),), seed=8),
+        ]
+        one = simulate_fleet(GEOM, specs, sampler="jax", devices=None)
+        two = simulate_fleet(GEOM, specs, sampler="jax", devices=2)
+        np.testing.assert_array_equal(one.app, two.app)
+        np.testing.assert_array_equal(one.mig, two.mig)
+        for i in range(len(specs)):
+            for key, a in one.state(i).items():
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(two.state(i)[key]), err_msg=key
+                )
+
+
+@pytest.mark.mesh
+@needs_mesh
+def test_step_cache_hits_across_two_grid_sweep():
+    """A sweep that revisits a step structure (same partitions/geometry/
+    scan length, new seeds) must reuse every compiled runner: zero new
+    misses, one hit per dispatched sub-batch."""
+    lba, n = GEOM.lba_pages, 2_000
+
+    def grid(seeds):
+        return [
+            DriveSpec(M.wolf(), (W.two_modal(lba, n),), seed=seeds[0]),
+            DriveSpec(M.wolf(), (W.uniform(lba, n),), seed=seeds[1]),
+            DriveSpec(M.single_group(), (W.uniform(lba, n),), seed=seeds[2]),
+        ]
+
+    simulate_fleet(GEOM, grid((0, 1, 2)), sampler="numpy", devices=2)
+    before = FX.step_cache_stats()
+    simulate_fleet(GEOM, grid((3, 4, 5)), sampler="numpy", devices=2)
+    after = FX.step_cache_stats()
+    assert after.misses == before.misses, "same-structure grid recompiled"
+    # two sub-batches (wolf-structure, single-structure) per grid
+    assert after.hits == before.hits + 2
