@@ -72,12 +72,26 @@ POLICIES = (
     ("wolf-wear", M.wolf_wear),
     ("fdp", M.fdp),
     ("single", M.single_group),
+    # finite-endurance row: wolf on an AGING drive — blocks retire once
+    # their P-E count crosses the limit, shrinking the OP the allocator
+    # divides. Shares a sub-batch with wolf/wolf-wear (faults are traced
+    # data, not a partition dimension), so this row also keeps the mixed
+    # faulty/fault-free compiled path on the benchmarked trajectory.
+    ("wolf-endurance", M.wolf_endurance),
 )
 
 
 def grid_specs(geom: Geometry, writes: int, seeds=(0,),
                only: str | None = None) -> list[DriveSpec]:
     lba = geom.lba_pages
+    # scale the P-E limit to the run length so every mode ages its drives
+    # into visible retirement (mean P-E at this geometry ≈ writes·WA/(K·B))
+    pe_limit = max(writes // 4000, 1)
+
+    def preset_cfg(pname, preset):
+        if pname == "wolf-endurance":
+            return preset(endurance_pe_limit=pe_limit)
+        return preset()
     workloads = (
         ("uniform", lambda: (W.uniform(lba, writes),)),
         ("two_modal", lambda: (W.two_modal(lba, writes),)),
@@ -91,7 +105,8 @@ def grid_specs(geom: Geometry, writes: int, seeds=(0,),
     )
     specs = [
         DriveSpec(
-            preset(), wl(), seed=seed, name=f"{pname}/{wname}#{seed}"
+            preset_cfg(pname, preset), wl(), seed=seed,
+            name=f"{pname}/{wname}#{seed}"
         )
         for seed in seeds
         for pname, preset in POLICIES
@@ -200,18 +215,25 @@ def run(full: bool = False, smoke: bool = False,
     # simulation work, just a read-off per drive
     wear_var = fleet.wear_variance()
     wear_imb = fleet.wear_imbalance()
+    # survival columns (retired capacity + degraded lanes): zeros for every
+    # fault-free row, the aging story for the wolf-endurance row
+    retired_frac = fleet.retired_fraction()
+    status = fleet.drive_status()
     rows = []
     cells: dict[str, dict] = {}
     for i, s in enumerate(specs):
         cell = s.name.rsplit("#", 1)[0]  # "policy/workload"
         c = cells.setdefault(
-            cell, {"sec": 0.0, "n": 0, "wa": [], "wvar": [], "wimb": []}
+            cell, {"sec": 0.0, "n": 0, "wa": [], "wvar": [], "wimb": [],
+                   "rfrac": [], "degraded": 0}
         )
         c["sec"] += drive_secs[i]
         c["n"] += 1
         c["wa"].append(float(fleet.wa_total[i]))
         c["wvar"].append(float(wear_var[i]))
         c["wimb"].append(float(wear_imb[i]))
+        c["rfrac"].append(float(retired_frac[i]))
+        c["degraded"] += int(status[i] != 0)
         if s.seed != seeds[0]:
             continue
         curve = fleet.result(i).wa_curve(window)
@@ -222,6 +244,8 @@ def run(full: bool = False, smoke: bool = False,
             "loop_wa_total": round(loop_results[i].wa_total, 3),
             "wear_var": round(float(wear_var[i]), 2),
             "wear_imbalance": round(float(wear_imb[i]), 3),
+            "retired_frac": round(float(retired_frac[i]), 4),
+            "degraded": int(status[i] != 0),
         })
     print(table(rows, list(rows[0].keys())))
     summary = {
@@ -291,6 +315,10 @@ def run(full: bool = False, smoke: bool = False,
                 # erase-count variance and max/mean P-E imbalance
                 "wear_var_mean": round(sum(c["wvar"]) / c["n"], 4),
                 "wear_imbalance_mean": round(sum(c["wimb"]) / c["n"], 4),
+                # survival context (report-only, like the wear columns):
+                # mean retired-capacity fraction + degraded-drive count
+                "retired_frac_mean": round(sum(c["rfrac"]) / c["n"], 4),
+                "degraded_count": c["degraded"],
             }
             for name, c in sorted(cells.items())
         },

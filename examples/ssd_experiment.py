@@ -45,6 +45,7 @@ def main():
     presets = {
         "wolf": M.wolf, "fdp": M.fdp, "single": M.single_group,
         "wolf_lru": M.wolf_lru, "wolf_dynamic": M.wolf_dynamic,
+        "wolf_endurance": M.wolf_endurance,
     }
     print(f"SSD: {geom.n_blocks} blocks × {geom.pages_per_block} pages, "
           f"LBA/PBA={geom.lba_pba}  workload={args.workload}")

@@ -10,6 +10,9 @@
 #   scripts/run_tests.sh --wear-smoke   # wear/endurance lane: the scoring-equivalence
 #                                       # + erase-accounting tests marked `wear`, plus
 #                                       # one wear-leveling bench cell (wolf-wear)
+#   scripts/run_tests.sh --fault-smoke  # fault/retirement lane: the fault-injection
+#                                       # + bad-block tests marked `fault`, plus one
+#                                       # finite-endurance bench cell (wolf-endurance)
 #   scripts/run_tests.sh --mesh-smoke   # mesh executor lane: the multi-device
 #                                       # shard_map equivalence tests marked `mesh`,
 #                                       # plus one 2-device bench cell
@@ -93,6 +96,31 @@ if [[ "${1:-}" == "--wear-smoke" ]]; then
     exit "$status"
 fi
 
+fault_bench_cell() {
+    # one finite-endurance bench cell: the wolf-endurance/uniform column of
+    # the smoke grid (scratch output — baselines stay untouched); exercises
+    # erase-fault injection, block retirement, and the degraded-lane
+    # masking end-to-end, mixed into a sub-batch with fault-free drives
+    export PYTHONPATH=".:${PYTHONPATH}"
+    local scratch status=0
+    scratch="$(mktemp /tmp/bench_fault.XXXXXX.json)"
+    python benchmarks/bench_fleet.py --smoke --only wolf-endurance/uniform \
+        --out "$scratch" || status=$?
+    rm -f "$scratch"
+    return "$status"
+}
+
+if [[ "${1:-}" == "--fault-smoke" ]]; then
+    # focused fault/retirement lane: every test marked `fault` (zero-rate
+    # bit-identity, retirement invariants, spare exhaustion + degraded
+    # lanes, the shrunken-OP model acceptance), then one finite-endurance
+    # bench cell. The default --fast lane subsumes this: the `fault` tests
+    # are not `slow`, and --fast appends the same cell.
+    python -m pytest -q -m fault
+    fault_bench_cell
+    exit 0
+fi
+
 if [[ "${1:-}" == "--bench-compare" ]]; then
     # regression gate: run the smoke grid to a scratch file (the committed
     # baselines are left untouched) and diff per-cell throughput against
@@ -116,6 +144,7 @@ if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -q -m "not slow" "$@"
     trim_bench_cell
     mesh_bench_cell
+    fault_bench_cell
     exit 0
 fi
 exec python -m pytest -q "$@"

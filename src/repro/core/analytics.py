@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "block_decay_updates",
@@ -42,6 +43,11 @@ __all__ = [
     "wear_imbalance",
     "lifetime_host_writes",
     "dwpd_from_lifetime",
+    "retired_fraction",
+    "degraded_op_ratio",
+    "wa_with_retirement",
+    "survival_fraction",
+    "wa_vs_lifetime",
 ]
 
 
@@ -226,6 +232,87 @@ def dwpd_from_lifetime(host_pages: jax.Array, *, lba_pages: int,
     days = jnp.asarray(years * 365.0, jnp.float32)
     return jnp.asarray(host_pages, jnp.float32) / (
         jnp.asarray(lba_pages, jnp.float32) * days
+    )
+
+
+# ---------------------------------------------------------------------------
+# Survival / retirement (fault-injection layer: blocks wear out, retire,
+# and shrink the OP the allocator divides — the WA-vs-lifetime study).
+# TRIM's effective-OP algebra runs in reverse here: where a trimmed page
+# ADDS dynamic over-provisioning, a retired block REMOVES physical space,
+# so r_eff rises toward 1 and the eq. 3 equilibrium WA climbs as the
+# drive ages (Dubeyko, arXiv:1907.11825 frames endurance management as
+# exactly this capacity/lifetime trade).
+# ---------------------------------------------------------------------------
+
+def retired_fraction(retired_blocks: jax.Array,
+                     n_blocks: int) -> jax.Array:
+    """Fraction of the physical block array in the terminal RETIRED state
+    (the simulator's O(1) carried ``retired_blocks`` over K)."""
+    return jnp.asarray(retired_blocks, jnp.float32) / jnp.asarray(
+        n_blocks, jnp.float32
+    )
+
+
+def degraded_op_ratio(r: jax.Array, retired_frac: jax.Array) -> jax.Array:
+    """Effective utilization ratio of an aged drive: retirements shrink
+    PBA while the logical span is unchanged,
+
+        r_eff = LBA / (PBA·(1 - f)) = r / (1 - f)
+
+    for retired fraction ``f`` — the mirror image of
+    :func:`effective_op_ratio` (TRIM grows OP; retirement eats it).
+    Clipped below 1 so the eq. 3 inversion stays defined at the point
+    where retirement has consumed the entire OP (WA → ∞)."""
+    r = jnp.asarray(r)
+    f = jnp.asarray(retired_frac)
+    return jnp.minimum(r / jnp.maximum(1.0 - f, 1e-9), 1.0 - 1e-7)
+
+
+def wa_with_retirement(r: jax.Array, retired_frac: jax.Array, *,
+                       iters: int = 80) -> jax.Array:
+    """Equilibrium WA of a uniform workload on a drive that has retired a
+    ``retired_frac`` fraction of its blocks: eq. 3 at the shrunken OP.
+    This is the closed-form curve the forced-retirement test tracks
+    (tests/test_faults.py) and the WA-vs-lifetime model overlay."""
+    return wa_from_op_ratio(degraded_op_ratio(r, retired_frac), iters=iters)
+
+
+def survival_fraction(degraded_at, t) -> jax.Array:
+    """Fleet survival curve: fraction of drives still in service at write
+    index ``t`` (broadcasting over ``t``).
+
+    degraded_at: [B] per-drive degradation write index, -1 while alive
+    (``FleetResult.time_to_degraded()``). A drive counts as surviving at
+    ``t`` iff it never degraded or degraded strictly after ``t``.
+    """
+    d = jnp.asarray(degraded_at)[:, None]  # [B, 1] against flattened t
+    t = jnp.asarray(t)
+    alive = (d < 0) | (d > jnp.ravel(t))
+    return jnp.mean(alive.astype(jnp.float32), axis=0).reshape(t.shape)
+
+
+def wa_vs_lifetime(app, mig, *, window: int = 2000,
+                   stride: int = 1) -> np.ndarray:
+    """[K] windowed WA over one drive's lifetime from its cumulative
+    (app, mig) trace — NaN for windows that complete no application
+    writes (the drive was already degraded/frozen: a halted op advances
+    neither counter), so the curve visibly ENDS where the drive died
+    instead of flat-lining at a fake 1.0.
+
+    window counts WRITES (must be a multiple of the trace stride), same
+    boundary convention as ``RunResult.wa_curve``.
+    """
+    assert window % stride == 0, (window, stride)
+    w = window // stride
+    app = np.asarray(app)
+    mig = np.asarray(mig)
+    idx = np.arange(w, len(app) + 1, w) - 1
+    prev = np.maximum(idx - w, -1)
+    d_app = app[idx] - np.where(prev >= 0, app[prev], 0)
+    d_mig = mig[idx] - np.where(prev >= 0, mig[prev], 0)
+    return np.where(
+        d_app > 0, (d_app + d_mig) / np.maximum(d_app, 1), np.nan
     )
 
 

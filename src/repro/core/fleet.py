@@ -49,6 +49,19 @@ Execution architecture (core/fleet_exec.py owns the device side):
   is also why ``devices="auto"`` from a jax-already-imported entry point
   warns instead of silently running on 1 device).
 
+Degraded drives are inert lanes, like filler drives: the fault-injection
+layer (see simulator.py's fault section) freezes a drive whose spare pool
+is exhausted via the traced ``drive_status`` + halt guard — every later op
+is a counted no-op on frozen-valid state. That is exactly the mechanism
+the mesh padding above uses for ragged sub-batches (a filler drive is a
+replicated row whose results are dropped), so a drive dying mid-scan never
+poisons its vmapped/shard_mapped sub-batch: survivors' lanes are
+elementwise untouched (tests/test_faults.py pins survivors bit-identical
+to running them alone), and the dead lane keeps producing valid (frozen)
+buffers until the scan ends. ``FleetResult.drive_status()`` /
+``retired_fraction()`` / ``time_to_degraded()`` / ``wa_vs_lifetime()``
+report the survival story per drive.
+
 Geometry is shared at the SHAPE level (array sizes: blocks, pages/block,
 logical span, group slots); within that shape, drives vary utilization and
 locality through their phase mix (e.g. a zero-probability cold tail emulates
@@ -71,6 +84,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fleet_exec import (
+    SubbatchFailure,
+    SubbatchResolutionError,
     enable_persistent_compilation_cache,
     pad_batch,
     resolve_devices,
@@ -89,6 +104,10 @@ _SHARED_FIELDS = (
     "q_create", "w_intervals",
     "cold_hit_rate_frac", "cold_op_frac", "gc_reserve_blocks",
     "bloom_bits_per_page", "valve_max_tries", "bloom_rotate_min_writes",
+    # the retry ladder depth is a static exponent in the compiled fault
+    # hook (rate^(1+retries)), not traced policy data — see
+    # simulator._erase_fault_retire; the RATES themselves are per-drive
+    "erase_max_retries",
 )
 
 
@@ -261,6 +280,53 @@ class FleetResult:
             host, lba_pages=self.geom.lba_pages, years=years
         ))
 
+    # -- survival / endurance analytics (fault-injection layer) -------------
+
+    def drive_status(self) -> np.ndarray:
+        """[B] traced drive status at the final state: 0 = STATUS_OK,
+        1 = STATUS_DEGRADED (spares exhausted or pool death — the drive
+        froze into an inert lane; see simulator._erase_fault_retire)."""
+        return np.array([
+            int(self.state(i)["drive_status"])
+            for i in range(len(self.specs))
+        ])
+
+    def retired_fraction(self) -> np.ndarray:
+        """[B] fraction of each drive's physical blocks in the terminal
+        RETIRED state — the capacity the §5.5 allocator has lost (0.0 for
+        fault-free drives)."""
+        assert self.geom is not None, "fleet built without geometry"
+        k = self.geom.n_blocks
+        return np.array([
+            float(self.state(i)["retired_blocks"]) / k
+            for i in range(len(self.specs))
+        ])
+
+    def time_to_degraded(self) -> np.ndarray:
+        """[B] application-write index at which each drive degraded, or -1
+        for drives still in service at the end of the run — the fleet's
+        time-to-failure curve (plot survival with
+        ``analytics.survival_fraction``)."""
+        return np.array([
+            int(self.state(i)["degraded_at"])
+            for i in range(len(self.specs))
+        ])
+
+    def wa_vs_lifetime(self, window: int = 2000) -> np.ndarray:
+        """[B, K] windowed WA over each drive's lifetime, NaN once the
+        drive is degraded (frozen windows complete no application writes)
+        — the WA-vs-lifetime curve of the aging study
+        (``analytics.wa_vs_lifetime`` computes one drive's curve)."""
+        from repro.core.analytics import wa_vs_lifetime
+
+        return np.stack([
+            wa_vs_lifetime(
+                self.app[i], self.mig[i], window=window,
+                stride=self.trace_every,
+            )
+            for i in range(len(self.specs))
+        ])
+
     def model_error(self, window: int = 2000, tail: int = 3,
                     pred: np.ndarray | None = None) -> np.ndarray:
         """[B] relative error of the eq. 3/5 prediction vs the simulated
@@ -417,6 +483,13 @@ def simulate_fleet(
         use_bloom = td_mode == "bloom"
         can_demote = td_mode != "static"
         sub = [specs[i] for i in idx]
+        # faults are traced per-drive DATA (rates/limits/seeds ride in
+        # policy), deliberately NOT a _part_key dimension: a faulty drive
+        # and a fault-free one share a compiled sub-batch, and the fault
+        # machinery is traced in only when some drive of the sub-batch can
+        # actually fail an erase — all-zero-rate sub-batches keep the
+        # exact fault-free step structure (bit-identity, tests/test_faults)
+        with_faults = any(s.mcfg.has_faults for s in sub)
         # group-cap padding is PER PARTITION: bloom filter width scales with
         # 1/max_groups, so padding a bloom drive beyond its sub-batch's own
         # cap would change its hashes vs the standalone managers.simulate
@@ -443,6 +516,7 @@ def simulate_fleet(
                 n_groups, use_bloom=use_bloom,
                 use_movement=use_movement, can_demote=can_demote,
                 use_dynamic=use_dynamic, use_closed_alloc=use_closed,
+                with_faults=with_faults,
             )
             policy = policy_from_config(ctx_d, assumed_p, fdp_rate)
             # the drive keeps its OWN dynamic-group cap in the padded arrays
@@ -498,6 +572,13 @@ def simulate_fleet(
                 movement_ops=use_movement, td_mode=td_mode,
                 dynamic_groups=use_dynamic,
                 alloc_mode=sub[0].mcfg.alloc_mode,
+                # normalize per-drive fault knobs out of the shared ctx:
+                # rates/limits/seeds are traced policy data, so the memoized
+                # runner key must depend only on with_faults (structure) and
+                # erase_max_retries (shared static), never on which rates
+                # this particular fleet happens to sweep
+                fault_rate=0.0, fault_rate_worn=1.0,
+                endurance_pe_limit=0, spare_blocks=None, fault_seed=0,
             ),
             n_groups_max,
             use_bloom=use_bloom,
@@ -511,6 +592,7 @@ def simulate_fleet(
             trace_every=trace_every,
             unroll=unroll,
             with_trim=with_trim,
+            with_faults=with_faults,
         )
         args = (
             _stack(sts),
@@ -532,22 +614,37 @@ def simulate_fleet(
         if pad:
             args = pad_batch(args, pad)
         runner = subbatch_runner(ctx, n_total, sampler == "jax", d)
-        pending.append((idx, runner(*args), pad))
+        pending.append((key, idx, runner(*args), pad))
         exec_meta.append({"drives": len(sub), "devices": d, "padding": pad})
 
     # resolve pass: block on each sub-batch's outputs (host↔device transfer
     # happens here, after every sub-batch has been enqueued) and strip the
-    # filler rows so padding never surfaces.
-    for idx, (st_f, trace, lbas), pad in pending:
-        b = len(idx)
-        app[idx], mig[idx] = (
-            np.asarray(trace[0][:b]), np.asarray(trace[1][:b])
-        )
-        if return_lbas:
-            lbas_out[idx] = np.asarray(lbas[:b])
-        if pad:
-            st_f = jax.tree_util.tree_map(lambda a: a[:b], st_f)
-        shards.append((idx, st_f))
+    # filler rows so padding never surfaces. Resolution is fenced PER
+    # sub-batch: a failure (device OOM, a poisoned buffer, a runtime error
+    # deferred by async dispatch) is recorded with its sub-batch index,
+    # partition key, and drive ids, and the REMAINING sub-batches still
+    # resolve — one bad sub-batch no longer orphans the others' already-
+    # dispatched work or surfaces as a context-free traceback.
+    failures: list[SubbatchFailure] = []
+    for k_i, (key, idx, out, pad) in enumerate(pending):
+        try:
+            st_f, trace, lbas = out
+            b = len(idx)
+            app[idx], mig[idx] = (
+                np.asarray(trace[0][:b]), np.asarray(trace[1][:b])
+            )
+            if return_lbas:
+                lbas_out[idx] = np.asarray(lbas[:b])
+            if pad:
+                st_f = jax.tree_util.tree_map(lambda a: a[:b], st_f)
+            shards.append((idx, st_f))
+        except Exception as e:  # noqa: BLE001 — rewrapped with context below
+            failures.append(SubbatchFailure(
+                subbatch=k_i, part_key=key, drive_ids=tuple(idx),
+                labels=tuple(specs[i].label for i in idx), error=e,
+            ))
+    if failures:
+        raise SubbatchResolutionError(failures, n_subbatches=len(pending))
 
     return FleetResult(
         app=app, mig=mig, specs=list(specs), shards=shards, lbas=lbas_out,

@@ -60,6 +60,45 @@ from repro.launch.mesh import drive_mesh
 from repro.utils.hostdev import host_device_flag
 
 
+@dataclasses.dataclass
+class SubbatchFailure:
+    """One failed sub-batch resolution (see SubbatchResolutionError)."""
+
+    subbatch: int            # dispatch-order index of the sub-batch
+    part_key: tuple          # its fleet._part_key (step structure)
+    drive_ids: tuple         # original spec indices of its drives
+    labels: tuple            # DriveSpec.label per drive
+    error: Exception         # the underlying exception, unchanged
+
+    def __str__(self) -> str:
+        return (
+            f"sub-batch {self.subbatch} (part_key={self.part_key}, "
+            f"drives={list(self.drive_ids)}, labels={list(self.labels)}): "
+            f"{type(self.error).__name__}: {self.error}"
+        )
+
+
+class SubbatchResolutionError(RuntimeError):
+    """Raised by ``simulate_fleet`` when one or more sub-batches failed to
+    resolve. Dispatch is asynchronous, so a device-side error (OOM, a
+    poisoned buffer, a runtime failure) only surfaces when the host blocks
+    on the outputs — this wrapper pins each failure to its sub-batch
+    index, ``_part_key``, and drive ids, and is raised only AFTER every
+    healthy sub-batch has resolved (their work is never orphaned; the
+    partial results are simply not returned). ``failures`` holds one
+    :class:`SubbatchFailure` per failed sub-batch."""
+
+    def __init__(self, failures: list[SubbatchFailure], *,
+                 n_subbatches: int):
+        self.failures = list(failures)
+        self.n_subbatches = n_subbatches
+        detail = "\n  ".join(str(f) for f in self.failures)
+        super().__init__(
+            f"{len(self.failures)}/{n_subbatches} fleet sub-batches failed "
+            f"to resolve:\n  {detail}"
+        )
+
+
 def resolve_devices(devices: int | str | None) -> int:
     """Resolve ``simulate_fleet``'s ``devices=`` argument to a device count.
 
@@ -129,6 +168,32 @@ def step_cache_clear() -> None:
 
 _PERSISTENT_WIRED = False
 
+# jaxlib builds whose XLA:CPU executable serialization corrupts the heap
+# when the Pallas-bearing step executables are written to the on-disk
+# cache (bisected on 0.4.37; 0.4.36 ships the same serialization path).
+# See the hazard note on enable_persistent_compilation_cache.
+_CACHE_BAD_JAXLIB_CPU = ("0.4.36", "0.4.37")
+
+
+def _persistent_cache_hazard() -> str | None:
+    """Return a reason string when the running jaxlib/backend combo is
+    known to corrupt the heap with the on-disk cache enabled, else None."""
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:  # pragma: no cover — jaxlib always ships with jax
+        jaxlib_version = jax.__version__
+    if (
+        jax.default_backend() == "cpu"
+        and jaxlib_version in _CACHE_BAD_JAXLIB_CPU
+    ):
+        return (
+            f"jaxlib {jaxlib_version} on XLA:CPU corrupts the process heap "
+            "when serializing Pallas-bearing step executables "
+            "(malloc_consolidate/segfault after ~a dozen cached compiles)"
+        )
+    return None
+
 
 def enable_persistent_compilation_cache(path: str | None = None) -> str:
     """Wire jax's on-disk compilation cache (idempotent).
@@ -148,14 +213,28 @@ def enable_persistent_compilation_cache(path: str | None = None) -> str:
         this module's runners and the per-drive step jits crashes once
         enough executables are written, with or without donation and on
         both CPU runtimes (thunk and legacy). Nothing in the repo enables
-        this by default; flip ``REPRO_JAX_CACHE_DIR`` on only on a
-        jax/jaxlib build where a full bench run survives with it set.
+        this by default, and since the fault-robustness pass this note is
+        ENFORCED: on a known-bad jaxlib/backend combo
+        (:data:`_CACHE_BAD_JAXLIB_CPU` × XLA:CPU) the call warns and
+        refuses to wire the cache instead of arming a delayed crash. Set
+        ``REPRO_JAX_CACHE_FORCE=1`` to override on a build you have
+        re-validated (a full bench run survives with the cache on).
     """
     global _PERSISTENT_WIRED
     path = path or os.environ.get(
         "REPRO_JAX_CACHE_DIR", os.path.expanduser("~/.cache/repro_jax_cache")
     )
     if _PERSISTENT_WIRED:
+        return path
+    hazard = _persistent_cache_hazard()
+    if hazard and not os.environ.get("REPRO_JAX_CACHE_FORCE"):
+        warnings.warn(
+            f"refusing to enable the on-disk compilation cache: {hazard}. "
+            "Set REPRO_JAX_CACHE_FORCE=1 to override on a re-validated "
+            "build.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
         return path
     jax.config.update("jax_compilation_cache_dir", path)
     # sim steps compile in O(seconds); cache anything non-trivial

@@ -77,6 +77,20 @@ def wolf_trim_aware(**kw) -> ManagerConfig:
     )
 
 
+def wolf_endurance(**kw) -> ManagerConfig:
+    """Wolf on an AGING drive: blocks die deterministically once their P-E
+    count crosses ``endurance_pe_limit`` (fault_rate_worn defaults to 1.0),
+    retire into the spare pool, and shrink the OP the §5.5 allocator
+    divides — the WA-vs-lifetime comparison point (tests/test_faults.py,
+    bench_fleet's endurance row). Pass ``fault_rate=...`` for an
+    additional age-independent failure floor."""
+    return ManagerConfig(
+        name="wolf-endurance", alloc_mode="wolf", gc_policy="greedy",
+        movement_ops=True, td_mode="static",
+        endurance_pe_limit=kw.pop("endurance_pe_limit", 40), **kw
+    )
+
+
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -196,6 +210,7 @@ def simulate(
     trace_every: int = 1,
     unroll: int = 1,
     ops_stream: bool | None = None,
+    faults: bool | None = None,
 ) -> RunResult:
     """Run a (possibly multi-phase) workload under a manager preset.
 
@@ -210,6 +225,10 @@ def simulate(
     sampled events are then identical (Phase.sample_ops consumes the same
     draws), which tests/test_write_engine.py uses to pin the op engine
     bit-identical to the write engine on all-WRITE streams.
+    faults: None (default) traces the fault layer iff ``mcfg.has_faults``;
+    True forces it on for a zero-rate config — the fault trace with an
+    empty event set, which tests/test_faults.py pins bit-identical to the
+    fault-free engine.
     """
     rng = np.random.default_rng(seed)
     st, n_groups, assumed_p, fdp_rate, page_rates, page_group0 = build_drive(
@@ -220,6 +239,11 @@ def simulate(
     assert ops_stream or not any(ph.has_trim for ph in phases), (
         "phases carry TRIMs: ops_stream=False is not available"
     )
+    if faults is None:
+        faults = mcfg.has_faults
+    assert faults or not mcfg.has_faults, (
+        "mcfg can fail erases: faults=False is not available"
+    )
     ctx = SimContext(
         geom, mcfg, n_groups, use_bloom=mcfg.td_mode == "bloom",
         gc_impl=gc_impl, fast_path=fast_path,
@@ -228,7 +252,7 @@ def simulate(
         use_dynamic=mcfg.dynamic_groups,
         use_closed_alloc=mcfg.alloc_mode in ("wolf", "optimal", "fdp_assumed"),
         trace_every=trace_every, unroll=unroll,
-        with_trim=ops_stream,
+        with_trim=ops_stream, with_faults=faults,
     )
     apps, migs = [], []
     for phase, page_rate in zip(phases, page_rates):

@@ -48,6 +48,45 @@ Architecture (op-stream layer):
   ``core/fleet.py`` partitions trim-bearing drives into their own
   sub-batches.
 
+Architecture (fault-injection / bad-block retirement layer):
+
+* **Faults are data, not step structure.** ``SimContext.with_faults``
+  (static, default ``False``) gates the traced fault machinery — the
+  per-erase Bernoulli draw, the halt guard, the retired-capacity term in
+  the §5.5 allocator — but the RATES live in ``policy``
+  (``fault_rate``, ``fault_rate_worn``, ``endurance_limit``,
+  ``fault_seed``), so a fleet sweeps failure rates × endurance limits in
+  ONE compiled grid and faulty + fault-free drives share a sub-batch
+  (``with_faults`` is deliberately NOT a ``fleet._part_key`` dimension).
+  ``with_faults=False`` traces the exact pre-fault step: zero-fault
+  drives stay bit-identical to the fault-free engine under jit and vmap
+  (tests/test_faults.py).
+
+* **Retry-then-retire at every erase site.** Each of the three GC drains
+  is wrapped by :func:`_erase_fault_retire` inside :func:`_gc_one`'s
+  dieted cond: one counter-based uniform (:func:`_fault_uniform`, a pure
+  function of ``(fault_seed, fault_draws)`` — replayable) decides the
+  whole retry ladder. The erase fails iff ``u < rate``; all
+  ``1 + erase_max_retries`` attempts fail iff ``u < rate^(1+retries)``,
+  and then the block RETIRES: the erase is undone from the wear
+  aggregates (a failed erase completes no P-E cycle), the block enters
+  the terminal ``RETIRED`` state keeping its group label
+  (``grp_retired`` follows §5.2 merges), and a spare is drawn. The rate
+  jumps from ``fault_rate`` to ``fault_rate_worn`` (default 1.0) once
+  the block's P-E count crosses ``endurance_limit`` — deterministic
+  block death at the limit, the simplest endurance model that makes WA
+  vs LIFETIME a measurable curve.
+
+* **Graceful degradation, not invariant violation.** Retired capacity is
+  subtracted from the §5.5 OP budget at the next interval, so the
+  allocator divides the SHRUNKEN physical space and
+  ``predicted_wa()``/``model_error()`` track the degraded geometry. When
+  the spare pool is dry the drive flips ``drive_status`` to
+  STATUS_DEGRADED (recording ``degraded_at``) and :func:`_halt_wrap`
+  freezes every later op into a counted no-op — at fleet scale a dead
+  drive is an inert lane in its vmapped sub-batch, masked exactly like
+  PR 6's filler drives, and never poisons its neighbors.
+
 Architecture (post fast-path refactor — see also the bulk-GC notes below):
 
 * **O(1) incremental accounting.** The paper treats pool occupancy and
@@ -178,6 +217,9 @@ from repro.core.ssd import (
     CLOSED,
     FREE,
     OPEN,
+    RETIRED,
+    STATUS_DEGRADED,
+    STATUS_OK,
     Geometry,
     ManagerConfig,
     SimState,
@@ -253,6 +295,16 @@ class SimContext:
     # (analytics eq. 3 inversion) per §5.1 interval; size/freq-allocated
     # drives never read its result
     use_closed_alloc: bool = True
+    # fault-injection / bad-block retirement layer. Static because it gates
+    # traced STRUCTURE (the per-erase fault draw, the degraded-drive halt
+    # guard, the retired-capacity term of the §5.5 allocator) — but it is
+    # deliberately NOT a fleet partition dimension: fault rates, endurance
+    # limits, and seeds are per-drive POLICY data, so faulty and fault-free
+    # drives share one compiled sub-batch (the fleet layer sets this per
+    # sub-batch iff any drive's mcfg.has_faults). False traces the EXACT
+    # fault-free step; True with zero-rate policy data produces
+    # elementwise-identical values on every pre-existing field.
+    with_faults: bool = False
     # trace stride: emit the cumulative (n_app, n_mig) counters after every
     # E-th write instead of every write (must divide the segment length);
     # the scan is then chunked [T//E, E] and the inner chunk emits nothing
@@ -295,6 +347,9 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
     assert ctx.use_closed_alloc or ctx.mcfg.alloc_mode not in (
         "wolf", "optimal", "fdp_assumed"
     ), f"alloc {ctx.mcfg.alloc_mode!r} needs the closed form"
+    assert ctx.with_faults or not ctx.mcfg.has_faults, (
+        "mcfg can fail erases but ctx.with_faults is False"
+    )
     return {
         "alloc_mode": jnp.asarray(_ALLOC_CODES[ctx.mcfg.alloc_mode], jnp.int32),
         # (α, β, γ, τ) victim-score weights (ManagerConfig.gc_weights):
@@ -313,6 +368,20 @@ def policy_from_config(ctx: SimContext, assumed_p=None, fdp_rate=None) -> dict:
         "ewma_a": jnp.asarray(ctx.mcfg.ewma_a, jnp.float32),
         "assumed_p": jnp.asarray(assumed_p, jnp.float32),
         "fdp_rate": jnp.asarray(fdp_rate, jnp.float32),
+        # fault injection (per-drive TRACED data — a fleet sweeps failure
+        # rates × endurance limits in one compiled grid; consumed by
+        # _erase_fault_retire only when ctx.with_faults). endurance_limit
+        # INT_MAX = the worn regime is unreachable for this drive.
+        "fault_rate": jnp.asarray(ctx.mcfg.fault_rate, jnp.float32),
+        "fault_rate_worn": jnp.asarray(ctx.mcfg.fault_rate_worn, jnp.float32),
+        "endurance_limit": jnp.asarray(
+            ctx.mcfg.endurance_pe_limit
+            if ctx.mcfg.endurance_pe_limit > 0 else INT_MAX,
+            jnp.int32,
+        ),
+        "fault_seed": jnp.asarray(
+            ctx.mcfg.fault_seed & 0xFFFFFFFF, jnp.uint32
+        ),
     }
 
 
@@ -338,6 +407,19 @@ _GC_FIELDS = (
     # aggregates and clears its trimmed-slot tally
     "erase_count", "trim_dead", "erase_total", "erase_sq_total",
 )
+# extra fields the post-erase fault hook (_erase_fault_retire) can touch —
+# appended to _GC_FIELDS at every drain cond/while ONLY in with_faults
+# contexts, so fault-free steps keep their exact select set
+_FAULT_FIELDS = (
+    "retired_blocks", "spares_left", "grp_retired", "drive_status",
+    "degraded_at", "n_erase_fail", "fault_draws",
+)
+
+
+def _gc_fields(ctx: SimContext):
+    """The drain-cond field set: _GC_FIELDS, plus the fault hook's fields
+    when the context injects faults (every erase site shares this)."""
+    return _GC_FIELDS + (_FAULT_FIELDS if ctx.with_faults else ())
 # fields the in-write block allocation (_pop_free_block + seal) can touch
 _ALLOC_FIELDS = (
     "state", "group_of", "fill", "grp_phys", "grp_surplus", "free_blocks",
@@ -545,6 +627,105 @@ def _clear_valid(ctx: SimContext, st: SimState, pm):
         valid=st.valid.at[blk_c, slot].set(
             jnp.where(has, False, st.valid[blk_c, slot])
         )
+    )
+
+
+# ---------------------------------------------------------------------------
+# fault injection / bad-block retirement
+# ---------------------------------------------------------------------------
+
+def _fault_uniform(seed, n):
+    """Counter-based uniform in [0, 1): murmur3's fmix32 finalizer over
+    (seed, draw index). The top 24 hash bits map to an exactly-representable
+    float32 in [0, 1 - 2^-24], so ``u < rate`` is never perturbed by
+    rounding at either endpoint: rate 0 fails nothing, rate 1 fails
+    everything. Counter-based (the draw index is carried state) so the
+    fault stream is a pure function of (seed, #erases so far) — replayable,
+    order-independent of everything else the step does."""
+    h = seed + n * jnp.uint32(2654435761)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h >> 8).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def _erase_fault_retire(ctx: SimContext, st: SimState, victim, g, policy):
+    """Retry-then-retire fault hook, applied to a drain's OUTPUT state
+    (the victim is already erased: FREE, wear counters bumped).
+
+    One uniform decides the whole retry ladder: the erase attempt fails
+    iff ``u < rate`` and all ``1 + erase_max_retries`` attempts fail iff
+    ``u < rate^(1+retries)`` — retire ⊂ fail by construction, so a single
+    draw covers both and a zero-rate drive consumes the identical (empty)
+    event set. ``rate`` is the per-drive base ``fault_rate`` until the
+    victim's P-E count crosses the per-drive ``endurance_limit``, then
+    ``fault_rate_worn`` (default 1.0: deterministic death at the limit).
+
+    On retire the erase is UNDONE from the wear accounting (a failed erase
+    completes no P-E cycle) and the block leaves circulation: state
+    RETIRED, group label restored (``grp_retired`` tracks labels through
+    §5.2 merges), the pool gives back the block it just reclaimed, one
+    spare is drawn. If the spare pool was already dry, the drive degrades
+    instead of violating the pool invariants: ``drive_status`` flips to
+    STATUS_DEGRADED and every later op freezes (make_step's halt guard).
+    """
+    if not ctx.with_faults:
+        return st
+    ec_new = st.erase_count[victim]  # post-bump P-E count of this erase
+    worn = (ec_new - 1) >= policy["endurance_limit"]
+    rate = jnp.where(
+        worn,
+        jnp.maximum(policy["fault_rate_worn"], policy["fault_rate"]),
+        policy["fault_rate"],
+    )
+    u = _fault_uniform(policy["fault_seed"], st.fault_draws)
+    failed = u < rate
+    retired = u < rate ** (1 + ctx.mcfg.erase_max_retries)
+    d = jnp.where(retired, 1, 0)
+    spares0 = st.spares_left
+    # Death has two doors. (1) Spares exhausted: the accounting margin
+    # that keeps effective OP positive is gone. (2) Pool death: a
+    # retiring GC nets ZERO free blocks (drain +1, retire -1), so heavy
+    # retirement can drain the pool to empty — and at free_blocks == 0
+    # no GC can ever run again (_gc_one needs ≥ 1 for migration
+    # headroom): the drive is operationally dead even with spares left.
+    # Either way we freeze instead of silently dropping writes.
+    free_after = st.free_blocks - d
+    degrade = (
+        retired
+        & (st.drive_status == STATUS_OK)
+        & ((spares0 <= 0) | (free_after <= 0))
+    )
+    return st.replace(
+        state=st.state.at[victim].set(
+            jnp.where(retired, RETIRED, st.state[victim]).astype(
+                st.state.dtype
+            )
+        ),
+        group_of=st.group_of.at[victim].set(
+            jnp.where(retired, jnp.asarray(g, jnp.int32),
+                      st.group_of[victim])
+        ),
+        free_blocks=free_after,
+        # a failed erase completes no P-E cycle: undo the drain's bump
+        # (e_old = ec_new - 1; Σe² loses (e_old+1)² − e_old²)
+        erase_count=st.erase_count.at[victim].add(-d),
+        erase_total=st.erase_total - d,
+        erase_sq_total=st.erase_sq_total - d * (2 * (ec_new - 1) + 1),
+        n_erase=st.n_erase - d,
+        retired_blocks=st.retired_blocks + d,
+        grp_retired=st.grp_retired.at[g].add(d),
+        spares_left=jnp.maximum(spares0 - d, 0),
+        n_erase_fail=st.n_erase_fail + jnp.where(failed, 1, 0),
+        drive_status=jnp.where(
+            degrade, STATUS_DEGRADED, st.drive_status
+        ).astype(jnp.int32),
+        degraded_at=jnp.where(
+            degrade & (st.degraded_at < 0), st.n_app, st.degraded_at
+        ).astype(jnp.int32),
+        fault_draws=st.fault_draws + jnp.uint32(1),
     )
 
 
@@ -1025,7 +1206,15 @@ def _gc_one(ctx: SimContext, st: SimState, g, policy, rate_fn, gc_w,
         def drain(s):
             return _gc_drain_reference(ctx, s, victim, g, demote_fn)
 
-    return _cond_fields(ok, drain, st, _GC_FIELDS)
+    if ctx.with_faults:
+        # the fault hook runs on the drain OUTPUT (victim just erased),
+        # inside this same dieted cond — no second full-state select
+        base_drain = drain
+
+        def drain(s):
+            return _erase_fault_retire(ctx, base_drain(s), victim, g, policy)
+
+    return _cond_fields(ok, drain, st, _gc_fields(ctx))
 
 
 # ---------------------------------------------------------------------------
@@ -1057,6 +1246,14 @@ def _recompute_alloc(ctx: SimContext, st: SimState, policy):
         - (mcfg.gc_reserve_blocks + 1 + n_active) * b
         - s.sum()
     )
+    if ctx.with_faults:
+        # retired capacity leaves the OP budget: the allocator divides the
+        # SHRUNKEN physical space, so predicted_wa()/model_error() track
+        # the degraded geometry. Zero-retirement drives subtract exactly
+        # 0.0. Budgets refresh at the next §5.1 interval (deliberate — an
+        # eager realloc on retire would make the 80-iter closed-form
+        # bisection a per-step select).
+        op_total = op_total - st.retired_blocks.astype(jnp.float32) * b
 
     if ctx.use_closed_alloc:
         op_closed = allocate_closed_form(
@@ -1182,8 +1379,13 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
             jnp.where(ab >= 0, CLOSED, st.state[jnp.maximum(ab, 0)])
         )
         merged = {}
-        for key in ("grp_size", "grp_live", "grp_phys", "grp_p",
-                    "grp_writes"):
+        # RETIRED blocks keep their group label, so a merge must move the
+        # per-group retired counts along with the live/phys aggregates
+        merge_keys = ("grp_size", "grp_live", "grp_phys", "grp_p",
+                      "grp_writes")
+        if ctx.with_faults:
+            merge_keys = merge_keys + ("grp_retired",)
+        for key in merge_keys:
             arr = getattr(st, key)
             merged[key] = arr.at[g_to].add(arr[g_from]).at[g_from].set(0)
         grp_active = st.grp_active.at[g_from].set(False)
@@ -1199,12 +1401,14 @@ def _maybe_create_or_merge(ctx: SimContext, st: SimState, policy):
             **merged,
         )
 
-    return _cond_fields(
-        do_merge, merge, st,
-        ("group_of", "state", "active_blk", "grp_active", "grp_surplus",
-         "cooldown", "grp_size", "grp_live", "grp_phys", "grp_p",
-         "grp_writes"),
+    merge_cond_fields = (
+        "group_of", "state", "active_blk", "grp_active", "grp_surplus",
+        "cooldown", "grp_size", "grp_live", "grp_phys", "grp_p",
+        "grp_writes",
     )
+    if ctx.with_faults:
+        merge_cond_fields = merge_cond_fields + ("grp_retired",)
+    return _cond_fields(do_merge, merge, st, merge_cond_fields)
 
 
 # ---------------------------------------------------------------------------
@@ -1417,7 +1621,7 @@ def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
             tries + 1,
         )
 
-    st, _ = _while_fields(needs_air, reclaim, st, 0, _GC_FIELDS)
+    st, _ = _while_fields(needs_air, reclaim, st, 0, _gc_fields(ctx))
 
     st = _write_page(ctx, st, lba, g, is_migration=False)
     st = st.replace(
@@ -1450,11 +1654,15 @@ def _step_tail(ctx: SimContext, st: SimState, lba, t, g, policy, lookup):
         is_interval = (st.n_app % h) == 0
     else:
         is_interval = ((t + 1) % h) == 0
+    interval_fields = _INTERVAL_FIELDS
+    if ctx.with_faults:
+        # §5.2 merges relabel retired counts (see _maybe_create_or_merge)
+        interval_fields = interval_fields + ("grp_retired",)
     st = _cond_fields(
         is_interval,
         lambda s: _interval_update(ctx, s, policy),
         st,
-        _INTERVAL_FIELDS,
+        interval_fields,
     )
     return st
 
@@ -1480,6 +1688,32 @@ def _trim_page(ctx: SimContext, st: SimState, lba):
         page_map=page_map, valid=valid, n_trim=st.n_trim + 1,
         trim_dead=st.trim_dead.at[blk_c].add(jnp.where(has, 1, 0)),
     )
+
+
+def _halt_wrap(ctx: SimContext, body):
+    """Freeze a degraded drive: once ``drive_status`` leaves STATUS_OK
+    (spares exhausted, see :func:`_erase_fault_retire`) every subsequent
+    op is a counted no-op — the drive is an inert lane that only bumps
+    ``n_halted``, never a crashed trace or an invariant violation. The
+    guard is one dieted cond over the op-mutable field set; fault-free
+    contexts return ``body`` unchanged (zero structural footprint).
+    Under vmap a degraded lane still executes both select branches on its
+    (frozen, valid) state — all inner loops stay bounded."""
+    if not ctx.with_faults:
+        return body
+
+    def guarded(st, *args):
+        out = jax.lax.cond(
+            st.drive_status == STATUS_OK,
+            lambda s: _fields_of(body(s, *args), _OP_FIELDS),
+            lambda s: _fields_of(
+                s.replace(n_halted=s.n_halted + 1), _OP_FIELDS
+            ),
+            st,
+        )
+        return st.replace(**dict(zip(_OP_FIELDS, out)))
+
+    return guarded
 
 
 def make_step(ctx: SimContext, policy, rate_fn, page_group0=None):
@@ -1609,13 +1843,17 @@ def make_step(ctx: SimContext, policy, rate_fn, page_group0=None):
         )
         return st.replace(**dict(zip(_STEP_FIELDS, out)))
 
+    # degraded drives (faults only) freeze before any per-op work runs
+    reference_write_g = _halt_wrap(ctx, reference_write)
+    split_write_g = _halt_wrap(ctx, split_write)
+
     def reference_step(st, xs):
         lba, t = xs
 
         def lookup(s, l):
             return rate_fn(s, l, t)
 
-        st = reference_write(st, lba, t, lookup)
+        st = reference_write_g(st, lba, t, lookup)
         return st, (st.n_app, st.n_mig)
 
     def split_step(st, xs):
@@ -1624,7 +1862,7 @@ def make_step(ctx: SimContext, policy, rate_fn, page_group0=None):
         def lookup(s, l):
             return rate_fn(s, l, t)
 
-        st = split_write(st, lba, t, lookup)
+        st = split_write_g(st, lba, t, lookup)
         return st, (st.n_app, st.n_mig)
 
     def op_step(st, xs):
@@ -1634,13 +1872,19 @@ def make_step(ctx: SimContext, policy, rate_fn, page_group0=None):
             return rate_fn(s, l, t)
 
         write_fn = split_write if ctx.fast_path else reference_write
-        out = jax.lax.cond(
-            op == OP_TRIM,
-            lambda s: _fields_of(_trim_page(ctx, s, lba), _OP_FIELDS),
-            lambda s: _fields_of(write_fn(s, lba, t, lookup), _OP_FIELDS),
-            st,
-        )
-        st = st.replace(**dict(zip(_OP_FIELDS, out)))
+
+        def op_body(st):
+            out = jax.lax.cond(
+                op == OP_TRIM,
+                lambda s: _fields_of(_trim_page(ctx, s, lba), _OP_FIELDS),
+                lambda s: _fields_of(
+                    write_fn(s, lba, t, lookup), _OP_FIELDS
+                ),
+                st,
+            )
+            return st.replace(**dict(zip(_OP_FIELDS, out)))
+
+        st = _halt_wrap(ctx, op_body)(st)
         return st, (st.n_app, st.n_mig)
 
     if ctx.with_trim:

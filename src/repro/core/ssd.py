@@ -25,6 +25,16 @@ import jax
 import jax.numpy as jnp
 
 FREE, OPEN, CLOSED = 0, 1, 2
+# terminal block state: an erase failed past its retry budget and the block
+# was pulled from circulation. A RETIRED block KEEPS its group_of label (so
+# the per-group retired accounting survives §5.2 merges) but is excluded
+# from every FREE/CLOSED mask — it can never be claimed, written, or
+# selected as a GC victim again.
+RETIRED = 3
+# traced drive_status values: a drive whose spare pool is exhausted flips
+# to DEGRADED (read-only/halted — every subsequent op freezes as a no-op)
+# instead of violating the pool invariants.
+STATUS_OK, STATUS_DEGRADED = 0, 1
 INT32_MAX = 2**31 - 1
 
 
@@ -128,6 +138,37 @@ class ManagerConfig:
     # §5.6 bloom rotation floor: a group's filter pair rotates every
     # max(grp_size, this) writes, so tiny/fresh groups don't thrash
     bloom_rotate_min_writes: int = 64
+    # -- fault injection / bad-block retirement (simulator erase sites) ----
+    # Per-erase Bernoulli failure probability. A failed erase retries up to
+    # erase_max_retries times; a block whose retries all fail is RETIRED
+    # and replaced from the spare pool. fault_rate and the endurance knobs
+    # are TRACED per-drive policy data — fleets sweep failure rates ×
+    # endurance limits in one compiled grid (no step-structure change).
+    fault_rate: float = 0.0
+    # failure probability once a block's erase_count crosses the endurance
+    # limit (the worn regime). Default 1.0: a block dies deterministically
+    # at its P-E limit, the classic endurance-budget model — a worn rate
+    # < 1 models the softer exponential tail instead.
+    fault_rate_worn: float = 1.0
+    # per-block P-E endurance limit; 0 disables the worn regime entirely
+    endurance_pe_limit: int = 0
+    # retry budget before a failing erase retires its block (shared static:
+    # it shapes the retire probability rate^(1+retries), not the trace)
+    erase_max_retries: int = 3
+    # spare-block pool size; None = every physical block beyond the logical
+    # content + GC reserve + group slots (the init_state auto bound). When
+    # the pool exhausts, the next retirement flips drive_status to DEGRADED.
+    spare_blocks: int | None = None
+    # per-drive fault stream seed (traced policy data, like fault_rate)
+    fault_seed: int = 0
+
+    @property
+    def has_faults(self) -> bool:
+        """True iff this config can ever fail an erase — the fleet layer
+        derives ``SimContext.with_faults`` (per sub-batch) from this."""
+        return self.fault_rate > 0.0 or (
+            self.endurance_pe_limit > 0 and self.fault_rate_worn > 0.0
+        )
 
     def gc_weights(self) -> tuple:
         """Resolve the victim-score weights (α, β, γ, τ) for this drive.
@@ -166,6 +207,9 @@ _SIM_STATE_FIELDS = (
     "grp_alloc", "grp_active", "grp_created", "grp_surplus", "grp_live",
     # O(1) accounting (incrementally maintained; see check_invariants)
     "free_blocks", "mapped_pages",
+    # fault / retirement layer (bad-block management; see simulator.py)
+    "retired_blocks", "spares_left", "grp_retired", "drive_status",
+    "degraded_at", "n_erase_fail", "n_halted", "fault_draws",
     # detector (bloom filter pair)
     "bloom_active", "bloom_passive", "bloom_writes",
     # counters
@@ -241,6 +285,24 @@ class SimState:
     # FleetResult.predicted_wa) read this scalar instead of reducing over
     # the logical span.
     mapped_pages: jax.Array  # [] int32
+    # -- fault / retirement layer (bad-block management) --------------------
+    # O(1) carried retirement accounting, cross-checked by check_invariants:
+    # retired_blocks == (state == RETIRED).sum(); grp_retired[g] == retired
+    # blocks still labeled group g (RETIRED blocks keep group_of, so the
+    # counts relabel consistently through §5.2 merges); spares_left is the
+    # remaining spare-block budget (each retirement draws one; at 0 the
+    # NEXT retirement degrades the drive instead).
+    retired_blocks: jax.Array  # [] int32 == (state == RETIRED).sum()
+    spares_left: jax.Array     # [] int32 ≥ 0 always
+    grp_retired: jax.Array     # [G] int32 retired blocks per group label
+    # STATUS_OK until a retirement finds the spare pool empty, then
+    # STATUS_DEGRADED forever: every subsequent op freezes as a no-op
+    # (an inert lane under vmap — the fleet masks it like a filler drive)
+    drive_status: jax.Array  # [] int32 STATUS_OK / STATUS_DEGRADED
+    degraded_at: jax.Array   # [] int32 n_app at degradation, -1 = alive
+    n_erase_fail: jax.Array  # [] int32 failed erase attempts (incl. retired)
+    n_halted: jax.Array      # [] int32 ops frozen after degradation
+    fault_draws: jax.Array   # [] uint32 fault-stream counter (hash input)
     bloom_active: jax.Array   # [G, bits] bool (§5.6); [G, 1] when unused
     bloom_passive: jax.Array  # [G, bits] bool
     bloom_writes: jax.Array   # [G] int32
@@ -278,9 +340,14 @@ class SimState:
         """
         k, b = self.slot_lba.shape
         arange_g = jnp.arange(self.grp_active.shape[0])
-        # per-group physical block counts from scratch
+        # per-group physical block counts from scratch. A RETIRED block
+        # keeps its group label for grp_retired accounting but is out of
+        # circulation — grp_phys counts only OPEN/CLOSED blocks.
         owned = self.group_of[None, :] == arange_g[:, None]  # [G, K]
-        phys = jnp.sum(owned & (self.state[None, :] != FREE), axis=1)
+        in_service = (self.state[None, :] == OPEN) | (
+            self.state[None, :] == CLOSED
+        )
+        phys = jnp.sum(owned & in_service, axis=1)
         # packed-map injectivity: every mapped lba names a distinct, valid
         # slot whose slot_lba points back at it
         pm = self.page_map
@@ -343,6 +410,18 @@ class SimState:
             ),
             "trim_dead_pure_write": (self.n_trim > 0)
             | jnp.all(self.trim_dead == 0),
+            # fault / retirement accounting: the carried counters equal the
+            # reductions, the spare pool never goes negative, and a
+            # degraded drive has a recorded degradation time
+            "retired_blocks": self.retired_blocks
+            == jnp.sum(self.state == RETIRED),
+            "grp_retired": jnp.all(
+                jnp.sum(owned & (self.state[None, :] == RETIRED), axis=1)
+                == self.grp_retired
+            ),
+            "spares_nonneg": self.spares_left >= 0,
+            "degraded_consistent": (self.drive_status == STATUS_OK)
+            | (self.degraded_at >= 0),
         }
 
 
@@ -414,6 +493,21 @@ def init_state(
     grp_active = np.zeros(g_max, bool)
     grp_active[:n_groups] = True
 
+    # spare-block pool: at most the physical blocks beyond the logical
+    # content, the GC reserve, one active block per group slot, and two
+    # blocks of migration headroom — retiring more than this would leave
+    # the allocator with no usable over-provisioning. mcfg.spare_blocks
+    # clamps WITHIN that bound (None = take it all).
+    content_blocks = -(-lba // b)  # ceil
+    auto_spares = max(
+        0, k - content_blocks - mcfg.gc_reserve_blocks - g_max - 2
+    )
+    spares = (
+        auto_spares
+        if mcfg.spare_blocks is None
+        else max(0, min(mcfg.spare_blocks, auto_spares))
+    )
+
     return SimState(
         page_map=jnp.asarray(page_map),
         slot_lba=jnp.asarray(slot_lba),
@@ -447,6 +541,14 @@ def init_state(
         grp_live=jnp.asarray(grp_size),  # fully mapped: live == size
         free_blocks=jnp.asarray(int((state_arr == FREE).sum()), jnp.int32),
         mapped_pages=jnp.asarray(lba, jnp.int32),
+        retired_blocks=jnp.zeros((), jnp.int32),
+        spares_left=jnp.asarray(spares, jnp.int32),
+        grp_retired=jnp.zeros(g_max, jnp.int32),
+        drive_status=jnp.asarray(STATUS_OK, jnp.int32),
+        degraded_at=jnp.asarray(-1, jnp.int32),
+        n_erase_fail=jnp.zeros((), jnp.int32),
+        n_halted=jnp.zeros((), jnp.int32),
+        fault_draws=jnp.zeros((), jnp.uint32),
         # (G, 1) placeholder when the context excludes the bloom branch
         # (SimContext.use_bloom=False)
         bloom_active=jnp.zeros(

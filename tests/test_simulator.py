@@ -31,12 +31,44 @@ def _check_invariants(geom, state):
     valid = np.asarray(state["valid"])
     fill = np.asarray(state["fill"])
     pm = np.asarray(state["page_map"])
+    blk_state = np.asarray(state["state"])
+    degraded = int(state["drive_status"]) != 0
     mapped = pm >= 0
     n_mapped = int(mapped.sum())
-    assert int(state["n_dropped"]) == 0, "writes were dropped (pool exhausted)"
+    if degraded:
+        # the op that killed the drive may lose its write (the retirement
+        # emptied the pool mid-step); every later op froze, so ≤ 1
+        assert int(state["n_dropped"]) <= 1, "degraded drive dropped >1"
+    else:
+        assert int(state["n_dropped"]) == 0, (
+            "writes were dropped (pool exhausted)"
+        )
     assert int(state["mapped_pages"]) == n_mapped, "carried mapped_pages"
-    if int(state["n_trim"]) == 0:
+    if int(state["n_trim"]) == 0 and int(state["n_dropped"]) == 0:
         assert n_mapped == geom.lba_pages, "pure-write drive fully mapped"
+    # block-state machine: only the four legal states; RETIRED blocks are
+    # terminal — carried counters (retired_blocks / grp_retired /
+    # spares_left) conserve against full reductions
+    assert set(np.unique(blk_state)) <= {0, 1, 2, 3}, "illegal block state"
+    retired = blk_state == 3
+    assert int(state["retired_blocks"]) == int(retired.sum()), (
+        "carried retired_blocks"
+    )
+    group_of = np.asarray(state["group_of"])
+    assert (group_of[retired] >= 0).all(), "retired block lost its group"
+    grp_retired = np.asarray(state["grp_retired"], np.int64)
+    np.testing.assert_array_equal(
+        np.bincount(
+            group_of[retired], minlength=grp_retired.shape[0]
+        ).astype(np.int64),
+        grp_retired,
+        err_msg="carried grp_retired",
+    )
+    assert int(state["spares_left"]) >= 0, "spare pool over-drawn"
+    assert (live[retired] == 0).all(), "retired block holds live pages"
+    assert degraded == (int(state["degraded_at"]) >= 0), (
+        "degraded_at inconsistent with drive_status"
+    )
     assert live.sum() == n_mapped, "live-page conservation"
     assert valid.sum() == n_mapped, "valid-bitmap conservation"
     np.testing.assert_array_equal(valid.sum(1), live, err_msg="live==Σvalid")
